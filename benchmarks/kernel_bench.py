@@ -1,0 +1,78 @@
+"""Pallas-kernel micro-benchmarks: wall time of each kernel (interpret mode
+on CPU — structural check; real perf is the TPU target) vs its jnp oracle,
+plus the blockwise-attention path vs the O(S^2) reference."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.shuffle.ops import shuffle, shuffle_ref
+    a = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    us_k = _time(lambda: shuffle(a, b, "interleave"))
+    us_r = _time(lambda: shuffle_ref(a, b, "interleave"))
+    rows.append(("kernel/shuffle_interleave_256x128", us_k,
+                 f"oracle_us={us_r:.0f}"))
+
+    from repro.kernels.fft.ops import fft as kfft
+    from repro.core.fft import fft as cfft
+    re = jnp.asarray(rng.normal(size=(32, 512)).astype(np.float32))
+    im = jnp.asarray(rng.normal(size=(32, 512)).astype(np.float32))
+    us_k = _time(lambda: kfft(re, im))
+    us_r = _time(lambda: cfft(re, im))
+    rows.append(("kernel/fft_32x512", us_k, f"oracle_us={us_r:.0f}"))
+
+    from repro.kernels.fir.ops import fir as kfir
+    from repro.core.fir import fir_direct, lowpass_taps
+    x = jnp.asarray(rng.normal(size=(16, 4096)).astype(np.float32))
+    taps = jnp.asarray(lowpass_taps(11))
+    us_k = _time(lambda: kfir(x, taps))
+    us_r = _time(lambda: fir_direct(x, taps))
+    rows.append(("kernel/fir_16x4096_11tap", us_k, f"oracle_us={us_r:.0f}"))
+
+    from repro.kernels.rope.ops import rope as krope
+    from repro.kernels.rope.ref import rope_ref
+    xr = jnp.asarray(rng.normal(size=(2048, 128)).astype(np.float32))
+    pos = jnp.asarray(np.arange(2048) % 512, dtype=jnp.int32)
+    us_k = _time(lambda: krope(xr, pos))
+    us_r = _time(lambda: rope_ref(xr, pos))
+    rows.append(("kernel/rope_2048x128", us_k, f"oracle_us={us_r:.0f}"))
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_ref
+    qf = jnp.asarray(rng.normal(size=(2, 512, 8, 64)).astype(np.float32))
+    kf = jnp.asarray(rng.normal(size=(2, 512, 4, 64)).astype(np.float32))
+    vf = jnp.asarray(rng.normal(size=(2, 512, 4, 64)).astype(np.float32))
+    us_k = _time(lambda: flash_attention(qf, kf, vf, q_chunk=128,
+                                         kv_chunk=128))
+    us_r = _time(lambda: flash_ref(qf, kf, vf))
+    rows.append(("kernel/flash_attn_B2_S512", us_k, f"oracle_us={us_r:.0f}"))
+
+    from repro.models.attention import blockwise_attention, reference_attention
+    q = jnp.asarray(rng.normal(size=(2, 512, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 512, 4, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 512, 4, 64)).astype(np.float32))
+    f_blk = jax.jit(lambda q, k, v: blockwise_attention(
+        q, k, v, causal=True, q_chunk=128, kv_chunk=128))
+    f_ref = jax.jit(lambda q, k, v: reference_attention(q, k, v, causal=True))
+    us_k = _time(lambda: f_blk(q, k, v))
+    us_r = _time(lambda: f_ref(q, k, v))
+    rows.append(("model/blockwise_attn_B2_S512", us_k, f"oracle_us={us_r:.0f}"))
+    return rows

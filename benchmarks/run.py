@@ -1,0 +1,34 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call: simulated kernels run
+at the paper's 80 MHz clock; Pallas kernels report interpret-mode wall time
+on CPU — the structural stand-in for the TPU target).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (kernel_bench, table2_fft, table3_power,
+                            table4_fir, table5_app)
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in (table2_fft, table3_power, table4_fir, table5_app,
+                kernel_bench):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failed += 1
+            print(f"{mod.__name__},nan,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

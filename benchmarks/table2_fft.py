@@ -1,0 +1,44 @@
+"""Table 2 — FFT kernel performance for various sizes (paper §5.1.1).
+
+Reproduces the VWR2A column of Table 2 from the cycle-accurate simulator;
+CPU and FFT-accelerator columns are the paper's measurements (they are
+physical-SoC numbers we cannot re-measure). Derived: sim/paper cycle ratio
+and the speed-up over the paper's CPU baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PAPER = {
+    # n: (cpu_cycles, accel_cycles, vwr2a_cycles)
+    "complex": {512: (47926, 7099, 7125), 1024: (84753, 13629, 12405),
+                2048: (219667, 31299, 30217)},
+    "real": {512: (24927, 3523, 3666), 1024: (62326, 8007, 7133),
+             2048: (113489, 16490, 14427)},
+}
+F_HZ = 80e6
+
+
+def run():
+    from repro.archsim.programs.fft import run_fft, run_rfft
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for kind, sizes in PAPER.items():
+        for n, (cpu, accel, vwr2a) in sizes.items():
+            if kind == "complex":
+                x = (rng.normal(size=n) + 1j * rng.normal(size=n)) * 0.3
+                X, counters, cycles = run_fft(n, x)
+                ref = np.fft.fft(x)
+            else:
+                x = rng.normal(size=n) * 0.3
+                X, counters, cycles = run_rfft(n, x)
+                ref = np.fft.rfft(x)
+            rel = float(np.abs(X - ref).max() / np.abs(ref).max())
+            us = cycles / F_HZ * 1e6
+            rows.append((f"table2/{kind}_fft_{n}", us,
+                         f"sim_cycles={cycles};paper_vwr2a={vwr2a};"
+                         f"ratio={cycles / vwr2a:.2f};"
+                         f"speedup_vs_cpu={cpu / cycles:.1f}x;"
+                         f"q15_rel_err={rel:.1e}"))
+    return rows

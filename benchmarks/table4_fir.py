@@ -1,0 +1,31 @@
+"""Table 4 — FIR filter (11 taps) performance & energy (paper §5.1.2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.table2_fft import F_HZ
+
+PAPER = {256: (24747, 0.37, 1849, 0.11), 512: (49253, 0.73, 3260, 0.21),
+         1024: (98283, 1.45, 6091, 0.40)}  # n: cpu_cyc, cpu_uJ, v_cyc, v_uJ
+
+
+def run():
+    from repro.archsim.energy import vwr2a_energy_uj
+    from repro.archsim.programs.fir import run_fir
+    from repro.core.fir import fir_reference, lowpass_taps
+
+    rows = []
+    taps = lowpass_taps(11)
+    for n, (cpu_cyc, cpu_uj, v_cyc, v_uj) in PAPER.items():
+        x = np.sin(np.arange(n) * 0.1) * 0.5
+        y, counters, cycles = run_fir(x, taps)
+        ref = fir_reference(x[None, :], taps)[0]
+        err = float(np.abs(y - ref).max())
+        e = vwr2a_energy_uj(counters)
+        rows.append((f"table4/fir_{n}", cycles / F_HZ * 1e6,
+                     f"sim_cycles={cycles};paper_vwr2a={v_cyc};"
+                     f"speedup_vs_cpu={cpu_cyc / cycles:.1f}x;"
+                     f"sim_uJ={e:.3f};paper_uJ={v_uj};"
+                     f"energy_savings_vs_cpu={100 * (1 - e / cpu_uj):.1f}%;"
+                     f"q15_err={err:.1e}"))
+    return rows

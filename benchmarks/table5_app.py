@@ -1,0 +1,58 @@
+"""Table 5 — MBioTracker biosignal application (paper §5.2).
+
+Per-step cycles/energy from the simulator vs the paper's CPU / CPU+FFT-ACCEL
+/ CPU+VWR2A columns. The CPU and accelerator columns are the paper's
+measurements; `savings` compares our simulated VWR2A against them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.table2_fft import F_HZ
+
+PAPER_CPU = {"preprocessing": (49760, 0.74), "delineation": (46268, 0.74),
+             "feat_extraction": (70639, 1.1), "total": (166667, 2.6)}
+PAPER_VWR2A = {"preprocessing": (3763, 0.26), "delineation": (2723, 0.13),
+               "feat_extraction": (8627, 0.47), "total": (15113, 0.86)}
+
+
+def run():
+    from repro.archsim.energy import vwr2a_energy_uj
+    from repro.archsim.programs.app import run_app
+    from repro.core.fir import lowpass_taps
+
+    rng = np.random.default_rng(0)
+    t = np.arange(1024) / 64.0
+    sig = 0.4 * np.sin(2 * np.pi * 0.3 * t) + 0.05 * rng.standard_normal(1024)
+    out = run_app(sig, lowpass_taps(11), rng.normal(size=(12, 2)) * 0.3,
+                  np.zeros(2))
+    rows = []
+    tot_c, tot_e = 0, 0.0
+    steps = ("preprocessing", "delineation", "feat_extraction", "svm")
+    for step in steps:
+        counters, cycles = out[step]
+        e = vwr2a_energy_uj(counters)
+        key = step if step != "svm" else "feat_extraction"
+        tot_c += cycles
+        tot_e += e
+        if step == "svm":
+            rows.append((f"table5/svm", cycles / F_HZ * 1e6,
+                         f"sim_cycles={cycles};sim_uJ={e:.4f}"))
+            continue
+        cpu_c, cpu_e = PAPER_CPU[step]
+        v_c, v_e = PAPER_VWR2A[step]
+        rows.append((f"table5/{step}", cycles / F_HZ * 1e6,
+                     f"sim_cycles={cycles};paper_vwr2a={v_c};"
+                     f"cycle_savings_vs_cpu={100 * (1 - cycles / cpu_c):.1f}%"
+                     f"(paper {100 * (1 - v_c / cpu_c):.1f}%);"
+                     f"sim_uJ={e:.3f};"
+                     f"energy_savings_vs_cpu={100 * (1 - e / cpu_e):.1f}%"))
+    cpu_c, cpu_e = PAPER_CPU["total"]
+    v_c, v_e = PAPER_VWR2A["total"]
+    rows.append(("table5/total", tot_c / F_HZ * 1e6,
+                 f"sim_cycles={tot_c};paper_vwr2a={v_c};"
+                 f"cycle_savings_vs_cpu={100 * (1 - tot_c / cpu_c):.1f}%"
+                 f"(paper 90.9%);sim_uJ={tot_e:.3f};"
+                 f"energy_savings_vs_cpu={100 * (1 - tot_e / cpu_e):.1f}%"
+                 f"(paper 66.3%)"))
+    return rows

@@ -1,0 +1,33 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine (greedy decode over 4 slots).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import build_model, init_model_params
+from repro.serve.engine import Engine, Request
+
+cfg = reduced(get_config("h2o-danube-3-4b"))   # exercises SWA decode
+model = build_model(cfg)
+params = init_model_params(model)
+eng = Engine(model, params, slots=4, max_len=96)
+
+rng = np.random.default_rng(0)
+for rid in range(6):
+    prompt = rng.integers(1, cfg.vocab_size, size=int(rng.integers(2, 6)))
+    eng.submit(Request(rid, prompt.tolist(), max_new=12))
+
+t0 = time.perf_counter()
+done = eng.run_to_completion()
+dt = time.perf_counter() - t0
+for r in sorted(done, key=lambda r: r.rid):
+    print(f"req {r.rid}: {r.prompt} -> {r.out}")
+tok = sum(len(r.out) for r in done)
+print(f"{len(done)} requests, {tok} tokens in {dt:.1f}s "
+      f"({tok / dt:.1f} tok/s, CPU)")
+assert len(done) == 6 and all(len(r.out) == 12 for r in done)
+print("serve_lm OK")

@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the structured synthetic stream, with checkpoints and resume.
+
+The config is qwen1.5-0.5b's family scaled to ~100M params (8 layers,
+d_model 512, vocab 32k). On CPU this takes a few minutes for 200 steps;
+pass --steps 30 for a quick look. Loss must drop well below ln(vocab).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.models.layers import param_count
+from repro.train import optim
+from repro.train.loop import LoopConfig, train
+from repro.train.step import init_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+cfg = dataclasses.replace(
+    get_config("qwen1.5-0.5b"),
+    name="qwen-100m", num_layers=12, d_model=768, num_heads=12,
+    num_kv_heads=12, head_dim=64, d_ff=2048, vocab_size=32768,
+    tie_embeddings=True, q_chunk=128, kv_chunk=128, tp_pad=1,
+    param_dtype=jax.numpy.float32, compute_dtype=jax.numpy.float32)
+model = build_model(cfg)
+print(f"params: {param_count(model.schema) / 1e6:.1f} M")
+
+mesh = make_local_mesh(data=len(jax.devices()), model=1)
+dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                global_batch=args.batch, structure=23)
+oc = optim.OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+abstract = {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq), np.int32),
+            "labels": jax.ShapeDtypeStruct((args.batch, args.seq), np.int32)}
+with mesh:
+    bundle = make_train_step(model, oc, mesh, abstract)
+    state = init_state(model, oc)
+    lc = LoopConfig(n_steps=args.steps, ckpt_every=max(50, args.steps // 4),
+                    ckpt_dir=args.ckpt_dir, log_every=10)
+    state, hist = train(model, bundle, dc, lc, state)
+first, last = hist[0]["loss"], hist[-1]["loss"]
+print(f"loss {first:.3f} -> {last:.3f} (ln vocab = "
+      f"{np.log(cfg.vocab_size):.2f})")
+if len(hist) >= 3:
+    assert last < first, "loss must decrease"
+print("train_lm OK")

@@ -1,0 +1,4 @@
+"""VWR2A (DAC '22) reproduced and scaled: JAX + Pallas framework.
+
+See DESIGN.md for the architecture map and EXPERIMENTS.md for results.
+"""

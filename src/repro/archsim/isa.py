@@ -1,0 +1,71 @@
+"""VWR2A slot ISA (paper §3.1-3.3, Table 1).
+
+One configuration word per cycle per slot; bits == control signals (no
+decode stage). We model each slot's instruction as a small dataclass; a
+column executes one instruction per slot per cycle under a shared PC.
+
+Slots per column: LCU (loops/branches), LSU (SPM<->VWR/SRF + shuffle unit),
+MXCU (VWR word index k + masks), RC0..RC3 (32-bit ALU, 2-entry regfile).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---- operand sources / destinations for RC ops -----------------------------
+# ("vwr", name)        word k of VWR slice for this RC (MXCU-controlled k)
+# ("srf", i)           scalar register file entry i
+# ("reg", 0|1)         RC-local register
+# ("imm", value)       immediate
+# ("rc", delta)        previous-cycle result of neighbour RC (delta = +-1)
+# ("zero",)            constant 0
+
+RC_OPS = ("NOP", "ADD", "SUB", "MUL", "FXMUL", "SLL", "SRL", "SRA",
+          "AND", "OR", "XOR", "MAX", "MIN", "MOV")
+
+
+@dataclasses.dataclass(frozen=True)
+class RCInstr:
+    op: str = "NOP"
+    a: Tuple = ("zero",)
+    b: Tuple = ("zero",)
+    dest: Optional[Tuple] = None          # ("reg",i) | ("vwr",name) | ("srf",i)
+
+    def __post_init__(self):
+        assert self.op in RC_OPS, self.op
+
+
+@dataclasses.dataclass(frozen=True)
+class LSUInstr:
+    op: str = "NOP"     # NOP | LOAD | STORE | LOAD_SRF | STORE_SRF | SHUFFLE
+    vwr: str = "A"      # target VWR (LOAD/STORE) or shuffle half selector
+    addr: Tuple = ("imm", 0)   # SPM line address source: ("imm",v)|("srf",i)
+    shuffle_op: str = ""       # interleave|prune_even|prune_odd|bit_reverse|circular_shift
+    half: str = "lower"
+
+
+@dataclasses.dataclass(frozen=True)
+class MXCUInstr:
+    op: str = "NOP"     # NOP | SETK | INCK | ADDK
+    k: int = 0          # immediate for SETK/ADDK
+
+
+@dataclasses.dataclass(frozen=True)
+class LCUInstr:
+    op: str = "NOP"     # NOP | SETI | ADDI | BLT | BGE | JUMP | EXIT
+    reg: int = 0        # LCU register index (4 regs)
+    val: int = 0        # immediate / compare bound
+    target: int = 0     # branch target PC
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotWord:
+    """One VLIW-style configuration word: all slots for one PC."""
+    lcu: LCUInstr = LCUInstr()
+    lsu: LSUInstr = LSUInstr()
+    mxcu: MXCUInstr = MXCUInstr()
+    rcs: Tuple[RCInstr, RCInstr, RCInstr, RCInstr] = (
+        RCInstr(), RCInstr(), RCInstr(), RCInstr())
+
+
+NOP_WORD = SlotWord()

@@ -1,0 +1,11 @@
+"""VWR2A core library: the paper's contribution as composable JAX modules.
+
+  vwr       — VWR staging discipline (asymmetric wide-register interface ->
+              BlockSpec/VMEM block planning)
+  shuffle   — the 4 shuffle-unit primitives (interleave, prune, bit-reversal,
+              circular shift)
+  fft       — radix-2 FFT on the shuffle dataflow (+ real-FFT packing)
+  fir       — FIR filtering on the VWR dataflow
+  biosignal — the MBioTracker application (preprocess/delineate/features/SVM)
+"""
+from repro.core import biosignal, fft, fir, shuffle, vwr  # noqa: F401

@@ -1,0 +1,42 @@
+"""FIR filtering on the VWR dataflow (paper §4.4.1: 11-tap FIR).
+
+The paper maps the FIR across both RC columns working on different slices of
+the input; each tap is a shifted multiply-accumulate, with the shuffle
+unit's *circular shift* providing the slice boundary words. In JAX the taps
+unroll to k shifted FMAs over the staged block — the same structure the
+Pallas kernel (kernels/fir) executes per VMEM tile.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def fir_direct(x, taps):
+    """Causal FIR: y[t] = sum_i taps[i] * x[t - i]. x: (..., S)."""
+    k = taps.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(k - 1, 0)])
+    y = jnp.zeros_like(x)
+    for i in range(k):  # unrolled taps == VWR circular shifts
+        y = y + taps[i] * xp[..., k - 1 - i: k - 1 - i + x.shape[-1]]
+    return y
+
+
+def fir_reference(x, taps):
+    """Oracle via np.convolve semantics ('full' truncated to causal)."""
+    x_np = np.asarray(x, np.float64)
+    t_np = np.asarray(taps, np.float64)
+    out = np.apply_along_axis(
+        lambda row: np.convolve(row, t_np)[: row.shape[0]], -1, x_np)
+    return out.astype(np.asarray(x).dtype)
+
+
+def lowpass_taps(n_taps: int = 11, cutoff: float = 0.15) -> np.ndarray:
+    """Hamming-windowed sinc low-pass — the biosignal preprocessing filter
+    (the paper's MBioTracker preprocess step uses an 11-tap FIR)."""
+    m = n_taps - 1
+    t = np.arange(n_taps) - m / 2
+    h = np.sinc(2 * cutoff * t) * 2 * cutoff
+    w = 0.54 - 0.46 * np.cos(2 * np.pi * np.arange(n_taps) / m)
+    h = h * w
+    return (h / h.sum()).astype(np.float32)

@@ -1,0 +1,77 @@
+"""VWR staging discipline: the paper's asymmetric register interface mapped
+to the TPU memory hierarchy (DESIGN.md §2).
+
+VWR2A fills a 4096-bit register from the SPM in ONE wide transaction and
+lets the datapath consume it word-by-word. On TPU the analogue is a
+BlockSpec-described VMEM block fetched by one (double-buffered) DMA per grid
+step, consumed by VREG-level compute. This module sizes those blocks:
+
+  * a "VWR line" = one (sublane x lane) = (8, 128) f32 tile = 4 KiB — the
+    TPU's natural wide word;
+  * a kernel's working set is budgeted as N_VWRS (default 3: A, B operands +
+    C result) wide registers, scaled to a VMEM budget instead of 3 x 512 B.
+
+``plan_blocks`` returns the largest hardware-aligned block shape such that
+n_vwrs live blocks (+ double buffering) fit the VMEM budget — the same
+trade-off the paper describes for choosing the 4096-bit VWR width
+("large enough to minimize refill frequency, small enough to bound leakage"
+becomes "large enough to amortize DMA latency, small enough to fit VMEM").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+SUBLANES = 8
+LANES = 128
+VMEM_BYTES = 16 * 2 ** 20          # v5e VMEM per core (16 MiB)
+
+
+@dataclasses.dataclass(frozen=True)
+class VWRSpec:
+    n_vwrs: int = 3                 # paper: A, B, C
+    vmem_budget: int = VMEM_BYTES // 2   # leave half for the compiler
+    double_buffer: bool = True      # Pallas pipelines HBM->VMEM fetches
+
+    def line_bytes(self, elem_bytes: int) -> int:
+        return SUBLANES * LANES * elem_bytes
+
+    def max_block_bytes(self, elem_bytes: int) -> int:
+        slots = self.n_vwrs * (2 if self.double_buffer else 1)
+        return self.vmem_budget // slots
+
+    def block_rows(self, row_bytes: int, elem_bytes: int) -> int:
+        """How many rows of `row_bytes` fit one staged block (>=1)."""
+        per = self.max_block_bytes(elem_bytes)
+        rows = max(1, per // max(row_bytes, 1))
+        # align down to a sublane multiple when possible
+        return max(1, (rows // SUBLANES) * SUBLANES) if rows >= SUBLANES else rows
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def plan_blocks(shape: tuple, elem_bytes: int,
+                spec: VWRSpec | None = None) -> tuple:
+    """Choose a hardware-aligned VMEM block shape for an (R, C) operand.
+
+    The last dim is padded conceptually to LANES, the second-to-last to
+    SUBLANES; leading dims are tiled to 1. Returns the block shape.
+    """
+    spec = spec or VWRSpec()
+    if len(shape) == 1:
+        cols = min(round_up(shape[0], LANES),
+                   spec.max_block_bytes(elem_bytes) // elem_bytes)
+        return (max(LANES, cols),)
+    *lead, r, c = shape
+    c_block = min(round_up(c, LANES), 4096)
+    row_bytes = c_block * elem_bytes
+    r_block = min(round_up(r, SUBLANES),
+                  spec.block_rows(row_bytes, elem_bytes))
+    return tuple([1] * len(lead) + [r_block, c_block])
+
+
+def vwr_words(bits: int = 4096, word_bits: int = 32) -> int:
+    """The paper's VWR geometry: 4096-bit register = 128 32-bit words."""
+    return bits // word_bits

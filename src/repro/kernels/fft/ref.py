@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the FFT kernel: core/fft's validated Stockham path
+(itself validated against np.fft to ~1e-7 relative)."""
+from __future__ import annotations
+
+from repro.core.fft import fft as fft_ref            # noqa: F401
+from repro.core.fft import rfft_packed as rfft_ref   # noqa: F401

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: k-tap causal FIR / depthwise conv (paper §4.4.1).
+
+Grid walks (row-block, seq-block) tiles. Each seq block is staged together
+with a (k-1)-word halo — the trailing words of the previous block, prepared
+by the host-side wrapper exactly like VWR2A's LSU uses the *circular shift*
+shuffle to deliver slice-boundary words (paper §3.3.1). Taps unroll to k
+shifted FMAs on the VPU; accumulation is f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.vwr import VWRSpec
+
+
+def fir_kernel(x_ref, halo_ref, taps_ref, o_ref, *, k: int):
+    x = x_ref[...]                       # (rb, sb)
+    halo = halo_ref[:, 0, :]             # (rb, k-1)
+    xp = jnp.concatenate([halo, x], axis=-1)     # (rb, sb + k - 1)
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):                   # unrolled taps == circular shifts
+        acc += taps_ref[0, i] * xp[:, k - 1 - i: k - 1 - i + x.shape[-1]
+                                   ].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "seq_block"))
+def fir_pallas(x, taps, *, seq_block: int = 2048, interpret: bool = True):
+    """x: (R, S); taps: (k,). Causal FIR along the last axis."""
+    R, S = x.shape
+    k = int(taps.shape[0])
+    sb = min(seq_block, S)
+    while S % sb:
+        sb -= 1
+    assert sb >= k, (sb, k)
+    nb = S // sb
+    # halo[j] = last (k-1) words of block j-1 (zeros for j=0) — the LSU-
+    # prepared boundary words
+    ends = jnp.arange(nb) * sb - (k - 1)
+    gather_idx = ends[:, None] + jnp.arange(k - 1)[None, :]     # (nb, k-1)
+    halo = jnp.where(gather_idx[None, :, :] >= 0,
+                     x[:, jnp.maximum(gather_idx, 0)], 0).astype(x.dtype)
+    spec = VWRSpec()
+    rb = max(1, min(R, spec.max_block_bytes(x.dtype.itemsize) //
+                    max(1, sb * x.dtype.itemsize)))
+    while R % rb:
+        rb -= 1
+    taps2 = taps.reshape(1, k).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(fir_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((R, S), x.dtype),
+        in_specs=[
+            pl.BlockSpec((rb, sb), lambda i, j: (i, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((rb, 1, k - 1), lambda i, j: (i, j, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, k), lambda i, j: (0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((rb, sb), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
+        grid=(R // rb, nb),
+        interpret=interpret,
+    )(x, halo, taps2)

@@ -1,0 +1,19 @@
+"""Public jit'd API for the FIR kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fir.kernel import fir_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fir(x, taps, *, seq_block: int = 2048):
+    """Causal FIR along the last axis. x: (R, S) or (S,)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    y = fir_pallas(x, taps, seq_block=seq_block, interpret=_interpret())
+    return y[0] if squeeze else y

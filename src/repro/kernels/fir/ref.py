@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the FIR kernel."""
+from __future__ import annotations
+
+from repro.core.fir import fir_direct as fir_ref  # noqa: F401
+from repro.core.fir import fir_reference          # noqa: F401

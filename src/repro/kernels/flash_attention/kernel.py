@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-resident tiles).
+
+The §Roofline prefill tables carry a documented caveat: the pure-JAX
+blockwise attention round-trips f32 score chunks through HBM. This kernel is
+the VWR-discipline answer — the (qc x kc) score tile, the running softmax
+statistics and the output accumulator never leave VMEM:
+
+  grid = (batch x heads, q-chunks, kv-chunks)    [kv innermost]
+  scratch (VMEM): m (qc,1), l (qc,1), acc (qc, dh) — persist across the kv
+  grid dimension (the standard TPU flash pattern); the kv loop initializes
+  at j==0 and publishes at j==last.
+
+GQA is handled in the BlockSpec index maps (kv head = h // group); causal
+chunks above the diagonal are skipped with @pl.when (no wasted tiles).
+f32 accumulation regardless of I/O dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window, qc: int, kc: int, nk: int, scale: float):
+    i = pl.program_id(1)          # q chunk
+    j = pl.program_id(2)          # kv chunk
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = i * qc
+    k_lo = j * kc
+
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale        # (qc, dh)
+        k = k_ref[0].astype(jnp.float32)                # (kc, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (qc, kc)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+        mask = jnp.ones((qc, kc), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, -1e30)
+        m_prev = m_ref[...]                              # (qc, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # (qc, kc)
+        corr = jnp.exp(m_prev - m_new)                   # (qc, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    if causal or window is not None:  # skip off-band tiles entirely
+        live = jnp.bool_(True)
+        if causal:
+            live &= k_lo <= q_lo + qc - 1
+        if window is not None:
+            live &= k_lo + kc - 1 >= q_lo - (window - 1)
+        pl.when(live)(_step)
+    else:
+        _step()
+
+    @pl.when(j == nk - 1)
+    def _publish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_chunk",
+                                             "kv_chunk", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           q_chunk: int = 256, kv_chunk: int = 256,
+                           interpret: bool = True):
+    """q: (B,Sq,H,dh); k,v: (B,Skv,KV,dh), H % KV == 0 -> (B,Sq,H,dh)."""
+    B, Sq, H, dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    assert Sq % qc == 0 and Skv % kc == 0, (Sq, qc, Skv, kc)
+    nq, nk = Sq // qc, Skv // kc
+    scale = float(1.0 / np.sqrt(dh))
+
+    # (B,S,H,dh) -> (B*H, S, dh) with heads-major flattening
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
+
+    kern = functools.partial(_kernel, causal=causal, window=window,
+                             qc=qc, kc=kc, nk=nk, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, dh), q.dtype),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, dh), lambda bh, i, j: (bh, i, 0),
+                         memory_space=pltpu.VMEM),
+            # GQA: flat kv row = (bh // H) * KV + (bh % H) // G
+            pl.BlockSpec((1, kc, dh),
+                         lambda bh, i, j, H=H, KV=KV, G=G:
+                         ((bh // H) * KV + (bh % H) // G, j, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, kc, dh),
+                         lambda bh, i, j, H=H, KV=KV, G=G:
+                         ((bh // H) * KV + (bh % H) // G, j, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, qc, dh), lambda bh, i, j: (bh, i, 0),
+                               memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: RoPE via the shuffle-unit dataflow (DESIGN.md §3).
+
+Interleaved (GPT-J) rotary IS the paper's shuffle algebra:
+    even/odd prune  ->  two streams x1, x2
+    rotate          ->  (x1 c - x2 s, x1 s + x2 c)     (VPU FMAs)
+    interleave      ->  back to lane-adjacent pairs
+The neox (rotate-half) layout replaces prune/interleave with half-splits.
+cos/sin are computed in-kernel from the staged position block (transcendental
+VPU ops) — no HBM-resident rotary table.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.vwr import VWRSpec
+
+
+def rope_kernel(x_ref, pos_ref, o_ref, *, theta: float, layout: str):
+    x = x_ref[...].astype(jnp.float32)       # (rb, dh)
+    pos = pos_ref[...].astype(jnp.float32)   # (rb, 1)
+    dh = x.shape[-1]
+    # inv-freq built in-kernel (2D iota; no captured constants)
+    idx = jax.lax.broadcasted_iota(jnp.float32, (1, dh // 2), 1)
+    inv = jnp.exp(idx * (2.0 / dh) * (-np.log(theta)))
+    ang = pos * inv                          # (rb, dh/2)
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    if layout == "interleaved":
+        xp = x.reshape(x.shape[0], dh // 2, 2)
+        x1, x2 = xp[..., 0], xp[..., 1]      # even/odd prune
+        o1 = x1 * c - x2 * s
+        o2 = x1 * s + x2 * c
+        out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)  # interleave
+    else:
+        x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+        out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "layout", "interpret"))
+def rope_pallas(x, positions, *, theta: float = 10000.0,
+                layout: str = "interleaved", interpret: bool = True):
+    """x: (R, dh); positions: (R,) int32. Returns rotated x."""
+    R, dh = x.shape
+    spec = VWRSpec()
+    rb = max(1, min(R, spec.max_block_bytes(4) // max(1, dh * 4)))
+    while R % rb:
+        rb -= 1
+    pos2 = positions.reshape(R, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(rope_kernel, theta=theta, layout=layout),
+        out_shape=jax.ShapeDtypeStruct((R, dh), x.dtype),
+        in_specs=[
+            pl.BlockSpec((rb, dh), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((rb, 1), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((rb, dh), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM),
+        grid=(R // rb,),
+        interpret=interpret,
+    )(x, pos2)

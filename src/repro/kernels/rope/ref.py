@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the RoPE kernel.
+
+Two layouts:
+  * 'interleaved' (GPT-J): pairs are adjacent lanes (x0,x1), (x2,x3)... —
+    this is the layout the VWR2A shuffle unit manipulates directly
+    (even/odd prune -> rotate -> interleave).
+  * 'neox' (rotate-half): pairs are (x_i, x_{i+d/2}) — the layout used by
+    models/attention.apply_rope.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _angles(positions, dh, theta):
+    inv = 1.0 / (theta ** (np.arange(0, dh, 2, dtype=np.float64) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * jnp.asarray(
+        inv, jnp.float32)
+    return jnp.cos(ang), jnp.sin(ang)          # (..., dh/2)
+
+
+def rope_ref(x, positions, *, theta: float = 10000.0,
+             layout: str = "interleaved"):
+    """x: (R, dh); positions: (R,)."""
+    dh = x.shape[-1]
+    cos, sin = _angles(positions, dh, theta)
+    xf = x.astype(jnp.float32)
+    if layout == "interleaved":
+        x1 = xf[..., 0::2]
+        x2 = xf[..., 1::2]
+        o1 = x1 * cos - x2 * sin
+        o2 = x1 * sin + x2 * cos
+        out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    else:  # neox rotate-half
+        x1, x2 = jnp.split(xf, 2, axis=-1)
+        out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                              axis=-1)
+    return out.astype(x.dtype)

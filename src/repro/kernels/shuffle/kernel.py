@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the VWR2A shuffle unit (paper §3.3.1).
+
+Each grid step stages one (rows x N) block of VWR A and B into VMEM (the
+wide single-transaction fill of the paper) and applies one of the four
+hardcoded permutations with register-level reshapes — no gathers:
+
+  * interleave      — stack/reshape on the lane axis
+  * prune even/odd  — reshape (N/2, 2) + component select
+  * bit_reverse     — reshape to (2,)*m + axis reversal (a bit-reversal IS a
+                      sequence of perfect shuffles; gather-free = TPU-native)
+  * circular_shift  — two lane slices + concat (static amount)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.vwr import VWRSpec
+
+
+def _interleave_vals(a, b):
+    return jnp.stack([a, b], axis=-1).reshape(*a.shape[:-1], -1)
+
+
+def _bit_reverse_vals(x):
+    n = x.shape[-1]
+    m = int(np.log2(n))
+    lead = x.shape[:-1]
+    x = x.reshape(lead + (2,) * m)
+    perm = tuple(range(len(lead))) + tuple(
+        len(lead) + m - 1 - i for i in range(m))
+    return x.transpose(perm).reshape(lead + (n,))
+
+
+def _take_half(x, half):
+    n = x.shape[-1] // 2
+    if half == "lower":
+        return x[..., :n]
+    if half == "upper":
+        return x[..., n:]
+    return x
+
+
+def shuffle_kernel(a_ref, b_ref, o_ref, *, op: str, half: str, amount: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    if op == "interleave":
+        out = _take_half(_interleave_vals(a, b), half)
+    elif op in ("prune_even", "prune_odd"):
+        comp = 1 if op == "prune_even" else 0  # drop even => keep odd
+        ar = a.reshape(*a.shape[:-1], a.shape[-1] // 2, 2)[..., comp]
+        br = b.reshape(*b.shape[:-1], b.shape[-1] // 2, 2)[..., comp]
+        out = jnp.concatenate([ar, br], axis=-1)
+    elif op == "bit_reverse":
+        out = _take_half(_bit_reverse_vals(jnp.concatenate([a, b], axis=-1)),
+                         half)
+    elif op == "circular_shift":
+        x = jnp.concatenate([a, b], axis=-1)
+        k = amount % x.shape[-1]
+        out = _take_half(jnp.concatenate([x[..., -k:], x[..., :-k]], axis=-1)
+                         if k else x, half)
+    else:
+        raise ValueError(op)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("op", "half", "amount",
+                                             "interpret"))
+def shuffle_pallas(a, b, *, op: str, half: str = "both", amount: int = 32,
+                   interpret: bool = True):
+    """a, b: (R, N) with N a power of two. Returns the shuffled block."""
+    R, N = a.shape
+    out_n = N if (half != "both" or op.startswith("prune")) else 2 * N
+    spec = VWRSpec()
+    rb = min(R, max(1, spec.max_block_bytes(a.dtype.itemsize) //
+                    max(1, 2 * N * a.dtype.itemsize)))
+    while R % rb:
+        rb -= 1
+    grid = (R // rb,)
+    kern = functools.partial(shuffle_kernel, op=op, half=half, amount=amount)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((R, out_n), a.dtype),
+        in_specs=[
+            pl.BlockSpec((rb, N), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((rb, N), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((rb, out_n), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM),
+        grid=grid,
+        interpret=interpret,
+    )(a, b)

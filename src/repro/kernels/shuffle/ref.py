@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the shuffle-unit kernel: delegates to core/shuffle
+(the semantic source of truth for the paper's four permutations)."""
+from __future__ import annotations
+
+from repro.core.shuffle import (  # noqa: F401
+    bit_reverse,
+    circular_shift,
+    interleave,
+    prune,
+)
+
+
+def shuffle_ref(a, b, op: str, **kw):
+    if op == "interleave":
+        return interleave(a, b, kw.get("half", "both"))
+    if op == "prune_even":
+        return prune(a, b, drop="even")
+    if op == "prune_odd":
+        return prune(a, b, drop="odd")
+    if op == "bit_reverse":
+        return bit_reverse(a, b, kw.get("half", "both"))
+    if op == "circular_shift":
+        return circular_shift(a, b, kw.get("amount", 32), kw.get("half", "both"))
+    raise ValueError(op)

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective statistics.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 pods x 256 chips.
+MUST be run as its own process (the XLA_FLAGS line above has to execute
+before any other jax import in the process).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_cost import analyze
+from repro.configs import (SHAPES, applicable_shapes, get_config, input_specs,
+                           ASSIGNED)
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_cache, build_model
+from repro.models import layers as L
+from repro.sharding.rules import Strategy
+from repro.train import optim
+from repro.train.step import make_train_step
+from repro.serve.step import make_serve_step
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+          "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        b = _shape_bytes(shape_str)
+        d = out.setdefault(op, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def _opt_config_for(cfg):
+    # the 400B MoE config needs compact moments to fit 16 GiB/chip
+    if cfg.name.startswith("llama4"):
+        return optim.OptConfig(m_dtype=jnp.bfloat16, v_dtype="qint8")
+    return optim.OptConfig()
+
+
+def lower_cell(arch: str, shape_name: str, mesh, strategy: str = None,
+               overrides: dict = None):
+    """Returns (lowered, meta) for one (arch x shape) cell."""
+    import dataclasses
+
+    from repro.sharding.rules import Strategy
+
+    cfg = get_config(arch)
+    for key, val in (overrides or {}).items():  # e.g. {"ssm.impl": "matmul"}
+        if key.startswith("ssm."):
+            cfg = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, **{key[4:]: val}))
+        elif key.startswith("moe."):
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, **{key[4:]: val}))
+        else:
+            cfg = dataclasses.replace(cfg, **{key: val})
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    batch = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        st = Strategy(strategy or "train")
+        bundle = make_train_step(model, _opt_config_for(cfg), mesh, batch,
+                                 strategy=st)
+        lowered = bundle.step_fn.lower(bundle.abstract_state, batch)
+    else:
+        st = Strategy(strategy or "serve")
+        bundle = make_serve_step(model, mesh, batch,
+                                 batch_size=shape.global_batch,
+                                 max_len=shape.seq_len, strategy=st)
+        if shape.kind == "prefill":
+            lowered = bundle.prefill_fn.lower(
+                bundle.abstract_params, batch, bundle.abstract_cache)
+        else:
+            lowered = bundle.decode_fn.lower(
+                bundle.abstract_params, batch, bundle.abstract_cache)
+    n_params = L.param_count(model.schema)
+    return lowered, {"arch": arch, "shape": shape_name,
+                     "kind": shape.kind, "n_params": n_params}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             strategy: str = None, overrides: dict = None, tag: str = ""):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "strategy": strategy or "default", "overrides": overrides or {},
+           "devices": int(mesh.devices.size)}
+    try:
+        with mesh:
+            lowered, meta = lower_cell(arch, shape_name, mesh, strategy,
+                                       overrides)
+            rec.update(meta)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            rec["lower_s"] = round(t1 - t0, 1)
+
+            ca = compiled.cost_analysis() or {}
+            rec["flops"] = float(ca.get("flops", -1))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+            rec["transcendentals"] = float(ca.get("transcendentals", -1))
+
+            try:
+                ma = compiled.memory_analysis()
+                if ma is not None:
+                    rec["memory"] = {
+                        k: int(getattr(ma, k))
+                        for k in ("argument_size_in_bytes",
+                                  "output_size_in_bytes",
+                                  "temp_size_in_bytes",
+                                  "generated_code_size_in_bytes")
+                        if hasattr(ma, k)}
+            except Exception as e:  # CPU backend may not implement it
+                rec["memory_error"] = str(e)
+
+            hlo = compiled.as_text()
+            rec["collectives_raw"] = collective_stats(hlo)
+            # trip-count-aware per-device cost model (see analysis/hlo_cost)
+            pod_size = 256 if mesh_kind == "multi" else 0
+            rec["hlo_cost"] = analyze(hlo, pod_size=pod_size)
+            rec["hlo_ops"] = len(re.findall(r"\n +\S+ = ", hlo))
+            rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = (f"__{strategy}" if strategy else "") + (f"__{tag}" if tag else "")
+    fn = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    fn.write_text(json.dumps(rec, indent=1))
+    status = rec["status"]
+    extra = "" if status == "ok" else f"  !! {rec.get('error', '')[:160]}"
+    print(f"[dryrun] {arch:28s} {shape_name:12s} {mesh_kind:6s} {status}"
+          f"  ({rec['total_s']}s){extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--strategy", default=None,
+                    help="override sharding strategy (e.g. fsdp)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. ssm.impl=matmul)")
+    ap.add_argument("--tag", default="", help="suffix for the output file")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+    out_dir = Path(args.out)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in applicable_shapes(get_config(arch)):
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        assert args.arch and args.shape
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    n_fail = 0
+    for arch, shape, mk in cells:
+        suffix = f"__{args.strategy}" if args.strategy else ""
+        fn = out_dir / f"{arch}__{shape}__{mk}{suffix}.json"
+        if args.skip_existing and fn.exists():
+            rec = json.loads(fn.read_text())
+            if rec.get("status") == "ok":
+                print(f"[dryrun] {arch:28s} {shape:12s} {mk:6s} cached-ok",
+                      flush=True)
+                continue
+        rec = run_cell(arch, shape, mk, out_dir, args.strategy, overrides,
+                       args.tag)
+        n_fail += rec["status"] != "ok"
+    print(f"[dryrun] done, {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Training CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --steps 200 --batch 8 --seq 256 --reduced --ckpt-dir ckpts
+
+On a real pod this process runs per host under `jax.distributed`; here it
+drives the same code on the local device(s). `--reduced` selects the smoke
+config; full configs are exercised via the dry-run on the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.train import optim
+from repro.train.loop import LoopConfig, train
+from repro.train.step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--data", default="synthetic")
+    ap.add_argument("--data-path", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+
+    n_dev = len(jax.devices())
+    mesh = make_local_mesh(data=n_dev, model=1)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch, seed=args.seed,
+                    source=args.data, path=args.data_path)
+    oc = optim.OptConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                         total_steps=args.steps)
+    abstract_batch = {
+        "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), np.int32),
+        "labels": jax.ShapeDtypeStruct((args.batch, args.seq), np.int32)}
+    if cfg.is_encdec:
+        abstract_batch["frames"] = jax.ShapeDtypeStruct(
+            (args.batch, cfg.enc_ctx, cfg.d_model), cfg.compute_dtype)
+    with mesh:
+        bundle = make_train_step(model, oc, mesh, abstract_batch)
+        state = init_state(model, oc, args.seed)
+        lc = LoopConfig(n_steps=args.steps,
+                        ckpt_every=args.ckpt_every,
+                        ckpt_dir=args.ckpt_dir or "checkpoints",
+                        log_every=max(1, args.steps // 20))
+        train(model, bundle, dc, lc, state)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.api import (  # noqa: F401
+    Model,
+    abstract_cache,
+    build_model,
+    init_cache,
+    init_model_params,
+)

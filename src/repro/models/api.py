@@ -1,0 +1,167 @@
+"""Public model API: build_model(cfg) -> Model with schema/forward/decode.
+
+All entry points are pure functions of (params, batch) suitable for jit /
+pjit; abstract variants (eval_shape-compatible) are used by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as att  # noqa: F401 (re-export)
+from repro.models import layers as L
+from repro.models import transformer as tfm
+from repro.models.layers import P
+from repro.sharding.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    schema: dict
+    plan: list
+    forward: Callable      # (params, batch) -> (logits, aux)
+    prefill: Callable      # (params, batch, cache) -> (logits, cache)
+    decode: Callable       # (params, batch, cache) -> (logits, cache)
+    cache_schema: Callable  # (batch_size, max_len) -> schema tree
+    loss: Callable         # (params, batch) -> (scalar, metrics)
+
+
+def _embed_tokens(params, batch, cfg, *, mode):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens).astype(cfg.compute_dtype)
+    if cfg.vlm_patches and mode != "decode" and "patch_emb" in batch:
+        Pn = cfg.vlm_patches
+        x = x.at[:, :Pn, :].set(batch["patch_emb"].astype(x.dtype))
+    if cfg.is_encdec:  # whisper decoder: absolute sinusoidal positions
+        S = tokens.shape[1]
+        if mode == "decode":
+            # position of the new token = cache_len (scalar or per-slot)
+            B = tokens.shape[0]
+            cl = jnp.broadcast_to(jnp.atleast_1d(batch["cache_len"]), (B,))
+            pos_tab = L.sinusoidal_positions(8192, cfg.d_model, x.dtype)
+            x = x + pos_tab[cl][:, None, :]
+        else:
+            x = x + L.sinusoidal_positions(S, cfg.d_model, x.dtype)[None]
+    if "embed_norm" in params:
+        x = L.apply_norm(params["embed_norm"], x, kind="layernorm",
+                         eps=cfg.norm_eps)
+    return constrain(x, "btd")
+
+
+def _positions(batch, cfg, *, mode):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if cfg.rope_style == "mrope":
+        return batch["positions"]
+    if mode == "decode":
+        cl = jnp.broadcast_to(jnp.atleast_1d(batch["cache_len"]), (B,))
+        return cl[:, None]
+    return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+
+def _final_logits(params, x, cfg):
+    x = L.apply_norm(params["final_norm"], x, kind=cfg.norm_type,
+                     eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.linear_head(params["head"], x)
+    return constrain(logits, "btv")
+
+
+def _encode(params, batch, cfg, enc_plan):
+    frames = batch["frames"].astype(cfg.compute_dtype)
+    S = frames.shape[1]
+    x = frames + L.sinusoidal_positions(S, cfg.d_model, frames.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], frames.shape[:2])
+    ctx = tfm.Ctx(cfg=cfg, mode="train", positions=pos, causal=False)
+    x, _, _ = tfm.apply_stack(params["encoder"], x, enc_plan, ctx)
+    return L.apply_norm(params["enc_norm"], x, kind=cfg.norm_type,
+                        eps=cfg.norm_eps)
+
+
+def build_model(cfg) -> Model:
+    plan = tfm.stack_plan(cfg)
+    enc_plan = tfm.encoder_plan(cfg) if cfg.is_encdec else None
+
+    schema: dict = {
+        "embed": L.embed_schema(cfg.vocab_size, cfg.d_model),
+        "stack": tfm.stack_schema(cfg, plan),
+        "final_norm": L.norm_schema(cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        schema["head"] = L.linear_head_schema(cfg.d_model, cfg.vocab_size)
+    if cfg.shared_attn_every:
+        schema["shared_attn"] = tfm.shared_attn_schema(cfg)
+    if cfg.is_encdec:
+        schema["encoder"] = tfm.stack_schema(cfg, enc_plan)
+        schema["enc_norm"] = L.norm_schema(cfg.d_model, cfg.norm_type)
+    if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        schema["embed_norm"] = L.norm_schema(cfg.d_model, "layernorm")
+
+    def _run(params, batch, cache, mode):
+        x = _embed_tokens(params, batch, cfg, mode=mode)
+        pos = _positions(batch, cfg, mode=mode)
+        enc_out = None
+        if cfg.is_encdec and mode != "decode":
+            enc_out = _encode(params, batch, cfg, enc_plan)
+        elif cfg.is_encdec and "enc_out" in batch:   # optional override
+            enc_out = batch["enc_out"].astype(cfg.compute_dtype)
+        cache_len = batch.get("cache_len") if mode == "decode" else None
+        ctx = tfm.Ctx(cfg=cfg, mode=mode, positions=pos, cache_len=cache_len,
+                      causal=True, enc_out=enc_out,
+                      shared=params.get("shared_attn"))
+        x, new_cache, aux = tfm.apply_stack(params["stack"], x, plan, ctx,
+                                            cache=cache)
+        logits = _final_logits(params, x, cfg)
+        return logits, new_cache, aux
+
+    def forward(params, batch):
+        logits, _, aux = _run(params, batch, None, "train")
+        return logits, aux
+
+    def prefill(params, batch, cache):
+        logits, new_cache, _ = _run(params, batch, cache, "prefill")
+        return logits[:, -1:, :], new_cache
+
+    def decode(params, batch, cache):
+        logits, new_cache, _ = _run(params, batch, cache, "decode")
+        return logits, new_cache
+
+    def cache_schema_fn(batch_size: int, max_len: int):
+        return tfm.cache_schema(cfg, plan, batch_size, max_len)
+
+    def loss(params, batch):
+        logits, aux = forward(params, batch)
+        ce = L.cross_entropy_loss(logits, batch["labels"])
+        total = ce + aux
+        return total, {"loss": total, "ce": ce, "aux": aux}
+
+    return Model(cfg=cfg, schema=schema, plan=plan, forward=forward,
+                 prefill=prefill, decode=decode,
+                 cache_schema=cache_schema_fn, loss=loss)
+
+
+# ---------------------------------------------------------------------------
+# Convenience
+# ---------------------------------------------------------------------------
+
+def init_model_params(model: Model, seed: int = 0):
+    return L.init_params(jax.random.PRNGKey(seed), model.schema,
+                         model.cfg.param_dtype)
+
+
+def init_cache(model: Model, batch_size: int, max_len: int):
+    schema = model.cache_schema(batch_size, max_len)
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, p.dtype or jnp.float32),
+        schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_cache(model: Model, batch_size: int, max_len: int):
+    schema = model.cache_schema(batch_size, max_len)
+    return L.abstract_params(schema, jnp.float32)

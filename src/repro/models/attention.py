@@ -1,0 +1,364 @@
+"""Attention: GQA/MHA, RoPE/M-RoPE, sliding-window, blockwise (flash-style)
+training/prefill path and cached decode path. Pure JAX + lax control flow.
+
+Memory discipline follows the paper's VWR staging idea: the sequence is
+walked in fixed-size chunks ("VWR fills"); the online-softmax accumulator
+plays the role of the in-register partial result, so the full (S x S) score
+matrix is never materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import P, fanin_std
+
+
+# ---------------------------------------------------------------------------
+# Schema (with grouped head padding)
+# ---------------------------------------------------------------------------
+
+def padded_heads(cfg) -> tuple[int, int]:
+    """(H_padded, group_padded): pad the per-KV-group query-head count so
+    H_padded = KV * G_p is divisible by cfg.tp_pad. Head index layout is
+    kv-major (h = kv * G_p + g) so GQA grouping survives the padding."""
+    H, KV, tp = cfg.num_heads, cfg.num_kv_heads, max(1, cfg.tp_pad)
+    G = H // KV
+    Gp = G
+    while (KV * Gp) % tp:
+        Gp += 1
+    return KV * Gp, Gp
+
+
+def head_mask(cfg, dtype=jnp.float32):
+    """(H_padded,) 1.0 for real heads, 0.0 for padding."""
+    Hp, Gp = padded_heads(cfg)
+    G = cfg.num_heads // cfg.num_kv_heads
+    m = (np.arange(Hp) % Gp) < G
+    return jnp.asarray(m, dtype)
+
+
+def attention_schema(cfg):
+    d, KV, dh = cfg.d_model, cfg.num_kv_heads, cfg.hd
+    Hp, _ = padded_heads(cfg)
+    s = {
+        "wq": P((d, Hp, dh), ("embed", "heads", "head_dim"), fanin_std(d)),
+        "wk": P((d, KV, dh), ("embed", "kv_heads", "head_dim"), fanin_std(d)),
+        "wv": P((d, KV, dh), ("embed", "kv_heads", "head_dim"), fanin_std(d)),
+        "wo": P((Hp, dh, d), ("heads", "head_dim", "embed"),
+                fanin_std(cfg.num_heads * dh)),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((Hp, dh), ("heads", "head_dim"), 0.0)
+        s["bk"] = P((KV, dh), ("kv_heads", "head_dim"), 0.0)
+        s["bv"] = P((KV, dh), ("kv_heads", "head_dim"), 0.0)
+    if cfg.proj_bias:
+        s["bo"] = P((d,), ("embed",), 0.0)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _inv_freq(dh: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, dh, 2, dtype=np.float64) / dh))
+
+
+def _mrope_segments(dh: int, sections) -> np.ndarray:
+    """Map each rotary frequency index to a position stream (0=t,1=h,2=w)."""
+    n = dh // 2
+    total = sum(sections)
+    counts = [int(round(n * s / total)) for s in sections]
+    counts[0] = n - sum(counts[1:])
+    return np.repeat(np.arange(len(sections)), counts)
+
+
+def apply_rope(x, positions, *, theta, style="neox", sections=(2, 1, 1)):
+    """x: (B, S, H, dh). positions: (B,S) int32 or (B,S,3) for mrope."""
+    if style == "none":
+        return x
+    dh = x.shape[-1]
+    inv = jnp.asarray(_inv_freq(dh, theta), jnp.float32)  # (dh/2,)
+    if style == "mrope":
+        seg = jnp.asarray(_mrope_segments(dh, sections))  # (dh/2,)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(seg, positions.shape[:-1] + seg.shape),
+            axis=-1,
+        )  # (B,S,dh/2) — per-frequency position stream
+        ang = pos * inv
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B,S,dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — train / prefill
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None,
+                        q_chunk=1024, kv_chunk=1024):
+    """Online-softmax chunked attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh) with H % KV == 0.
+    Returns (B, Sq, H, dh). Never materializes (Sq x Skv).
+    Off-band chunks are skipped with lax.cond (real compute saving under jit).
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    sq_valid, skv_valid = Sq, Skv
+    if Sq % qc:  # pad queries (rows discarded at the end)
+        q = jnp.pad(q, ((0, 0), (0, -Sq % qc), (0, 0), (0, 0)))
+        Sq = q.shape[1]
+    if Skv % kc:  # pad keys/values (masked out below)
+        k = jnp.pad(k, ((0, 0), (0, -Skv % kc), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, -Skv % kc), (0, 0), (0, 0)))
+        Skv = k.shape[1]
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / np.sqrt(dh)
+    # chunk index of the diagonal for causal masking (prefill: Sq == Skv)
+    q_of_k = qc  # q positions advance qc per chunk
+
+    qr = q.reshape(B, nq, qc, KV, G, dh)
+    kr = k.reshape(B, nk, kc, KV, dh)
+    vr = v.reshape(B, nk, kc, KV, dh)
+
+    q_pos = jnp.arange(Sq).reshape(nq, qc)
+    k_pos = jnp.arange(Skv).reshape(nk, kc)
+
+    if window is not None:
+        lo_chunk = lambda i, j: j * kc >= (i * qc - (window - 1) - (kc - 1))
+    else:
+        lo_chunk = lambda i, j: True
+
+    def q_block(args):
+        i, qb = args  # qb: (B, qc, KV, G, dh)
+        qb32 = qb.astype(jnp.float32) * scale
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+
+            def compute(_):
+                kb = kr[:, j].astype(jnp.float32)  # (B,kc,KV,dh)
+                vb = vr[:, j].astype(jnp.float32)
+                s = jnp.einsum("bqkgd,bskd->bkgqs", qb32, kb)  # (B,KV,G,qc,kc)
+                mask = k_pos[j][None, :] < skv_valid  # (1, kc) kv-pad mask
+                mask = jnp.broadcast_to(mask, (qc, kc))
+                if causal:
+                    mask &= q_pos[i][:, None] >= k_pos[j][None, :]
+                if window is not None:
+                    mask &= q_pos[i][:, None] - k_pos[j][None, :] < window
+                s = jnp.where(mask, s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bkgqs,bskd->bkgqd", p, vb
+                )
+                return m_new, l_new, acc_new
+
+            live = jnp.asarray(lo_chunk(i, j), bool)
+            if causal:
+                live &= jnp.asarray(j * kc <= i * q_of_k + (qc - 1))
+            return jax.lax.cond(live, compute, lambda _: (m, l, acc), None), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,qc,dh)
+        return out.transpose(0, 3, 1, 2, 4)  # (B,qc,KV,G,dh)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)))
+    # outs: (nq, B, qc, KV, G, dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, dh)
+    return out[:, :sq_valid].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode attention (one new token)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None):
+    """q: (B,1,H,dh); caches: (B,S,KV,dh); positions > cache_len masked.
+    cache_len: scalar or (B,) vector (per-slot continuous batching).
+
+    With the cache sequence-sharded over the model axis, the max/sum
+    reductions below become the flash-decoding partial-softmax combine
+    (XLA SPMD inserts the small all-reduces of m and l).
+    """
+    B, _, H, dh = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / np.sqrt(dh)
+    cl = jnp.broadcast_to(jnp.atleast_1d(cache_len), (B,))
+    qr = q.reshape(B, KV, G, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= cl[:, None]  # cache_len = index of the new token
+    if window is not None:
+        mask &= pos[None, :] > cl[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def decode_attention_ring(q, k_cache, v_cache, cl):
+    """Sliding-window decode over a RING cache of W slots: slot i holds the
+    key of absolute position p == i (mod W), p <= cache_len. All slots are
+    in-window once warm; cold slots (p would be negative) are masked."""
+    B, _, H, dh = q.shape
+    _, W, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / np.sqrt(dh)
+    qr = q.reshape(B, KV, G, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(jnp.float32))
+    slots = jnp.arange(W)[None, :]                      # (1, W)
+    # absolute position held by slot i: largest p <= cl with p % W == i
+    abs_pos = cl[:, None] - ((cl[:, None] - slots) % W)
+    mask = abs_pos >= 0
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block
+# ---------------------------------------------------------------------------
+
+def qkv_project(params, x, cfg):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dke->bske", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dke->bske", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def out_project(params, o, x_dtype, cfg):
+    # mask padded heads: exactly-zero output AND gradients for the padding
+    o = o * head_mask(cfg, o.dtype)[None, None, :, None]
+    out = jnp.einsum("bshe,hed->bsd", o, params["wo"].astype(o.dtype))
+    if "bo" in params:
+        out = out + params["bo"].astype(out.dtype)
+    return out.astype(x_dtype)
+
+
+def attention_block(params, x, *, cfg, positions, causal=True, cross_kv=None,
+                    cache=None, cache_len=None):
+    """One attention sub-layer (no norm/residual — the caller owns those).
+
+    Returns (out, new_cache) where new_cache is None unless caching.
+      * train/prefill: x is (B,S,d); if cache is provided (prefill) the fresh
+        K/V are written at [0:S].
+      * decode: x is (B,1,d); cache required.
+      * cross_kv=(k,v) precomputed encoder keys/values => cross-attention.
+    """
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(x.dtype))
+        if "bq" in params:
+            q = q + params["bq"].astype(x.dtype)
+        o = blockwise_attention(q, k, v, causal=False,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        return out_project(params, o, x.dtype, cfg), None
+
+    q, k, v = qkv_project(params, x, cfg)
+    if cfg.rope_style != "none":
+        q = apply_rope(q, positions, theta=cfg.rope_theta,
+                       style=cfg.rope_style, sections=cfg.mrope_sections)
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       style=cfg.rope_style, sections=cfg.mrope_sections)
+
+    if cache is not None and x.shape[1] == 1:  # decode
+        k_cache, v_cache = cache
+        B = x.shape[0]
+        S_cache = k_cache.shape[1]
+        cl = jnp.broadcast_to(jnp.atleast_1d(cache_len), (B,))
+        rows = jnp.arange(B)
+        if cfg.sliding_window and S_cache == cfg.sliding_window:
+            # ring buffer: slot i holds the key of absolute position p with
+            # p == i (mod W); new token at cache_len lands in slot cl % W
+            slot = cl % S_cache
+            k_cache = k_cache.at[rows, slot].set(k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, slot].set(v[:, 0].astype(v_cache.dtype))
+            o = decode_attention_ring(q, k_cache, v_cache, cl)
+        else:
+            k_cache = k_cache.at[rows, cl].set(k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, cl].set(v[:, 0].astype(v_cache.dtype))
+            o = decode_attention(q, k_cache, v_cache, cl,
+                                 window=cfg.sliding_window)
+        return out_project(params, o, x.dtype, cfg), (k_cache, v_cache)
+
+    o = blockwise_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    new_cache = None
+    if cache is not None:  # prefill into cache
+        k_cache, v_cache = cache
+        S_cache = k_cache.shape[1]
+        S = k.shape[1]
+        if cfg.sliding_window and S_cache == cfg.sliding_window:
+            # ring prefill: keep the last W keys, rotated so that the key of
+            # absolute position p sits in slot p % W
+            W = S_cache
+            if S >= W:
+                tail_k, tail_v = k[:, -W:], v[:, -W:]
+                shift = (S - W) % W
+            else:
+                pad = ((0, 0), (0, W - S), (0, 0), (0, 0))
+                tail_k, tail_v = jnp.pad(k, pad), jnp.pad(v, pad)
+                shift = 0
+            k_cache = jnp.roll(tail_k.astype(k_cache.dtype), shift, axis=1)
+            v_cache = jnp.roll(tail_v.astype(v_cache.dtype), shift, axis=1)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, 0, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, 0, 0, 0))
+        new_cache = (k_cache, v_cache)
+    return out_project(params, o, x.dtype, cfg), new_cache
+
+
+def reference_attention(q, k, v, *, causal=True, window=None):
+    """O(S^2)-memory oracle for tests."""
+    B, Sq, H, dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32))
+    s = s / np.sqrt(dh)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)

@@ -1,0 +1,209 @@
+"""Parameter-schema system + common layers (pure JAX, no flax).
+
+Every module describes its parameters as a *schema*: a nested dict whose
+leaves are :class:`P` entries carrying (shape, logical_axes, init_std).
+A single schema drives three things:
+
+  * ``init_params``      — materialize a pytree of arrays,
+  * ``axes_tree``        — matching pytree of logical-axis tuples (for sharding),
+  * ``abstract_params``  — matching pytree of ShapeDtypeStruct (for dry-run).
+
+Logical axis names used throughout (mapped to mesh axes by sharding/rules.py):
+  layers, embed, vocab, heads, kv_heads, head_dim, mlp, experts, expert_mlp,
+  conv, state, pos, None (replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Schema leaf: one parameter tensor."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (str) or None per dim
+    std: Any = 0.02  # float stddev | 0.0 => zeros | "ones" | ("uniform", lo, hi)
+    dtype: Any = None  # None => use param_dtype passed to init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def fanin_std(fan_in: int) -> float:
+    return 1.0 / math.sqrt(max(1, fan_in))
+
+
+def stack_schema(n: int, schema):
+    """Prepend a 'layers' dim of size n to every P in `schema`."""
+
+    def _stack(p: P) -> P:
+        return P((n,) + p.shape, ("layers",) + p.axes, p.std, p.dtype)
+
+    return jax.tree.map(_stack, schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def _init_leaf(key, p: P, param_dtype):
+    dtype = p.dtype or param_dtype
+    if p.std == "ones":
+        return jnp.ones(p.shape, dtype)
+    if isinstance(p.std, tuple) and p.std and p.std[0] == "uniform":
+        _, lo, hi = p.std
+        return jax.random.uniform(key, p.shape, dtype, lo, hi)
+    std = float(p.std)
+    if std == 0.0:
+        return jnp.zeros(p.shape, dtype)
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(key, schema, param_dtype=jnp.float32):
+    """Materialize the parameter pytree for `schema`."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, p, param_dtype) for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(schema):
+    """Pytree of logical-axis tuples matching the parameter pytree."""
+    return jax.tree.map(
+        lambda p: p.axes, schema, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def abstract_params(schema, param_dtype=jnp.float32):
+    """ShapeDtypeStruct pytree matching the parameter pytree (no allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or param_dtype),
+        schema,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_count(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, P))
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def norm_schema(d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": P((d,), ("embed",), "ones")}
+    return {"scale": P((d,), ("embed",), "ones"), "bias": P((d,), ("embed",), 0.0)}
+
+
+def apply_norm(params, x, *, kind: str = "rmsnorm", eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:  # layernorm
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_schema(vocab: int, d: int):
+    return {"embedding": P((vocab, d), ("vocab", "embed"), fanin_std(d))}
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x):
+    # logits in f32 for a numerically stable softmax/loss
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32),
+        params["embedding"].astype(jnp.float32),
+    )
+
+
+def linear_head_schema(d: int, vocab: int):
+    return {"w": P((d, vocab), ("embed", "vocab"), fanin_std(d))}
+
+
+def linear_head(params, x):
+    return jnp.einsum(
+        "...d,dv->...v", x.astype(jnp.float32), params["w"].astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain), optionally biased
+# ---------------------------------------------------------------------------
+
+def mlp_schema(d: int, d_ff: int, *, gated: bool = True, bias: bool = False):
+    s = {"w_in": P((d, d_ff), ("embed", "mlp"), fanin_std(d)),
+         "w_out": P((d_ff, d), ("mlp", "embed"), fanin_std(d_ff))}
+    if gated:
+        s["w_gate"] = P((d, d_ff), ("embed", "mlp"), fanin_std(d))
+    if bias:
+        s["b_in"] = P((d_ff,), ("mlp",), 0.0)
+        s["b_out"] = P((d,), ("embed",), 0.0)
+    return s
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def apply_mlp(params, x, *, act: str = "silu"):
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(dt))
+    if "b_in" in params:
+        h = h + params["b_in"].astype(dt)
+    if "w_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        h = _act(act)(g) * h
+    else:
+        h = _act(act)(h)
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"].astype(dt))
+    if "b_out" in params:
+        out = out + params["b_out"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(seq_len: int, d: int, dtype=jnp.float32):
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10000 ** (2 * dim / d))
+    ang = pos * inv
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+def cross_entropy_loss(logits, labels, *, z_loss: float = 0.0):
+    """Mean next-token CE. labels == -1 are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) block — scalar-per-head data-dependent decay + short conv.
+
+Evaluators:
+  * ``ssd_scan``    — per-token oracle.
+  * ``ssd_chunked`` — chunk-parallel SSD (segsum decay matrix per head,
+    lax.scan carries the (H,P,N) state across chunks).
+Short causal conv1d(k=4) runs over the (x,B,C) channels; in the full system
+it is served by the VWR-staged FIR Pallas kernel (kernels/fir) — the model
+default uses the pure-jnp path so CPU tests and TPU kernels share one oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, fanin_std
+
+
+def mamba_block_schema(cfg):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    H = d_in // s.head_size
+    N = s.d_state
+    conv_ch = d_in + 2 * N
+    return {
+        "norm": {"scale": P((d,), ("embed",), "ones")},
+        "in_proj": P((d, 2 * d_in + 2 * N + H), ("embed", "mlp"), fanin_std(d)),
+        "conv_w": P((s.conv_kernel, conv_ch), ("conv", "mlp"), fanin_std(s.conv_kernel)),
+        "conv_b": P((conv_ch,), ("mlp",), 0.0),
+        "A_log": P((H,), ("heads",), ("uniform", 0.0, 1.25)),
+        "D": P((H,), ("heads",), "ones"),
+        "dt_bias": P((H,), ("heads",), ("uniform", -4.6, -2.3)),
+        "gn_scale": P((d_in,), ("mlp",), "ones"),
+        "out_proj": P((d_in, d), ("mlp", "embed"), fanin_std(d_in)),
+    }
+
+
+def causal_conv1d(x, w, b, *, state=None):
+    """x: (B,S,C); w: (k,C); depthwise causal conv.
+
+    state: (B,k-1,C) trailing inputs from the previous call (decode), or None
+    (train/prefill: left-pad with zeros). Returns (y, new_state).
+    """
+    B, S, C = x.shape
+    k = w.shape[0]
+    state_dtype = x.dtype if state is None else state.dtype
+    if state is None:
+        state = jnp.zeros((B, k - 1, C), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B,S+k-1,C)
+    y = jnp.zeros((B, S, C), x.dtype)
+    for i in range(k):  # k is tiny (4): unrolled taps == VWR circular shifts
+        y = y + xp[:, i:i + S, :] * w[i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, S:, :].astype(state_dtype)
+    return y, new_state
+
+
+def ssd_scan(xh, dt, A, B_, C_, s0):
+    """Oracle. xh: (B,S,H,P); dt: (B,S,H); B_,C_: (B,S,N); s0: (B,H,P,N)."""
+    f32 = jnp.float32
+    xs = (jnp.moveaxis(xh, 1, 0).astype(f32), jnp.moveaxis(dt, 1, 0).astype(f32),
+          jnp.moveaxis(B_, 1, 0).astype(f32), jnp.moveaxis(C_, 1, 0).astype(f32))
+
+    def step(S, t):
+        x_, dt_, b_, c_ = t
+        a = jnp.exp(dt_ * A[None])                          # (B,H) in (0,1)
+        S = a[..., None, None] * S + jnp.einsum(
+            "bhp,bn->bhpn", x_ * dt_[..., None], b_)
+        y = jnp.einsum("bhpn,bn->bhp", S, c_)
+        return S, y
+
+    s_fin, y = jax.lax.scan(step, s0.astype(f32), xs)
+    return jnp.moveaxis(y, 0, 1), s_fin                     # (B,S,H,P)
+
+
+def ssd_chunked(xh, dt, A, B_, C_, s0, chunk: int):
+    """Chunk-parallel SSD. Scalar per-head decay => (L,L) segsum matrix."""
+    B, S_in, H, Pd = xh.shape
+    N = B_.shape[-1]
+    L = min(chunk, S_in)
+    if S_in % L:  # pad: x=0 (no writes), dt=0 (decay 1) => state exact
+        p2 = (0, -S_in % L)
+        xh = jnp.pad(xh, ((0, 0), p2, (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), p2, (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), p2, (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), p2, (0, 0)))
+    B, S, H, Pd = xh.shape
+    nc = S // L
+    f32 = jnp.float32
+    xc = (xh.astype(f32) * dt[..., None].astype(f32)).reshape(B, nc, L, H, Pd)
+    ac = (dt.astype(f32) * A[None, None].astype(f32)).reshape(B, nc, L, H)
+    bc = B_.reshape(B, nc, L, N).astype(f32)
+    cc = C_.reshape(B, nc, L, N).astype(f32)
+    mask = jnp.tril(jnp.ones((L, L), bool))                 # inclusive
+
+    def chunk_step(Sst, xs):
+        xb, ab, bb, cb = xs                                 # (B,L,...)
+        ca = jnp.cumsum(ab, axis=1)                         # (B,L,H) inclusive
+        # decay matrix D[t,j] = exp(ca_t - ca_j), j <= t (y_t uses S_t)
+        expo = ca[:, :, None] - ca[:, None, :, :]           # (B,L,L,H)
+        Dm = jnp.where(mask[None, :, :, None], jnp.exp(expo), 0.0)
+        cb_bt = jnp.einsum("bln,bmn->blm", cb, bb)          # (B,L,L)
+        y = jnp.einsum("blm,blmh,bmhp->blhp", cb_bt, Dm, xb)
+        # inter-chunk
+        y = y + jnp.einsum("bln,bhpn,blh->blhp", cb, Sst, jnp.exp(ca))
+        # state update
+        tot = ca[:, -1]                                     # (B,H)
+        kd = jnp.exp(tot[:, None] - ca)                     # (B,L,H)
+        Snew = jnp.exp(tot)[..., None, None] * Sst + jnp.einsum(
+            "blhp,bln,blh->bhpn", xb, bb, kd)
+        return Snew, y
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0),
+          jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+    s_fin, y = jax.lax.scan(chunk_step, s0.astype(f32), xs)
+    return jnp.moveaxis(y, 0, 1).reshape(B, S, H, Pd)[:, :S_in], s_fin
+
+
+def mamba_block(params, x, state, cfg, *, mode: str):
+    """x: (B,S,d). state: dict(conv: (B,k-1,C), s: (B,H,P,N))."""
+    from repro.models.layers import apply_norm
+
+    s = cfg.ssm
+    B, S, d = x.shape
+    d_in = s.expand * d
+    H = d_in // s.head_size
+    Pd, N = s.head_size, s.d_state
+    cd = x.dtype
+
+    h = apply_norm(params["norm"], x, kind="rmsnorm", eps=cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, params["in_proj"].astype(cd))
+    z, xr, B_, C_, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xr, B_, C_], axis=-1)
+    conv_out, conv_state = causal_conv1d(
+        conv_in, params["conv_w"], params["conv_b"], state=state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xr, B_, C_ = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,)
+    xh = xr.reshape(B, S, H, Pd)
+
+    if mode == "decode":
+        a = jnp.exp(dt[:, 0] * A[None])
+        Snew = a[..., None, None] * state["s"] + jnp.einsum(
+            "bhp,bn->bhpn",
+            xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None],
+            B_[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", Snew, C_[:, 0].astype(jnp.float32))
+        y = y[:, None]
+        s_fin = Snew
+    else:
+        y, s_fin = ssd_chunked(xh, dt, A, B_, C_, state["s"], s.chunk_size)
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * params["gn_scale"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", y.astype(cd), params["out_proj"].astype(cd))
+    return x + out, {"conv": conv_state, "s": s_fin}
+
+
+def mamba_state_schema(cfg, batch: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_size
+    conv_ch = d_in + 2 * s.d_state
+    return {
+        "conv": P((batch, s.conv_kernel - 1, conv_ch),
+                  ("batch", None, "mlp"), 0.0, jnp.float32),
+        "s": P((batch, H, s.head_size, s.d_state),
+               ("batch", "heads", None, None), 0.0, jnp.float32),
+    }

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer: GShard-style capacity-based dispatch.
+
+Tokens are split into groups; per group each token picks top-k experts and a
+slot in that expert's capacity buffer. Dispatch/combine are expressed as
+einsums so the expert dimension shards cleanly over the `model` mesh axis
+(expert parallelism) — XLA SPMD materializes the dispatch resharding as an
+all-to-all. Overflowing tokens are dropped (standard GShard semantics);
+capacity_factor controls the drop rate.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, fanin_std, _act
+
+
+def moe_schema(cfg):
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    s = {
+        "router": P((d, E), ("embed", "experts"), fanin_std(d), jnp.float32),
+        "w_gate": P((E, d, f), ("experts", "embed", "expert_mlp"), fanin_std(d)),
+        "w_in": P((E, d, f), ("experts", "embed", "expert_mlp"), fanin_std(d)),
+        "w_out": P((E, f, d), ("experts", "expert_mlp", "embed"), fanin_std(f)),
+    }
+    if m.num_shared:
+        fs = m.d_ff_shared * m.num_shared  # fuse shared experts into one MLP
+        s["shared"] = {
+            "w_gate": P((d, fs), ("embed", "mlp"), fanin_std(d)),
+            "w_in": P((d, fs), ("embed", "mlp"), fanin_std(d)),
+            "w_out": P((fs, d), ("mlp", "embed"), fanin_std(fs)),
+        }
+    return s
+
+
+def _capacity(sg: int, k: int, E: int, factor: float) -> int:
+    c = int(math.ceil(sg * k * factor / E))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_layer(params, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss). Drops overflow tokens (identity path
+    via the residual connection owned by the caller)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    T = B * S
+    sg = min(m.group_size, T)
+    while T % sg:  # largest divisor of T <= group_size (odd seq lengths)
+        sg -= 1
+    G = T // sg
+    xg = x.reshape(G, sg, d)
+
+    # --- routing (f32 for stable softmax) ---
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G,sg,E)
+    gates, idx = jax.lax.top_k(probs, k)     # (G,sg,k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # --- aux load-balancing loss (Switch-style) ---
+    me = jnp.mean(probs, axis=(0, 1))                       # mean router prob
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))                 # top-1 load share
+    aux = E * jnp.sum(me * ce) * m.aux_loss_weight
+
+    # --- capacity assignment: sequential over the k slots ---
+    C = _capacity(sg, k, E, m.capacity_factor)
+    counts = jnp.zeros((G, E), jnp.float32)
+    combine = jnp.zeros((G, sg, E, C), jnp.float32)
+    for slot in range(k):
+        oh = jax.nn.one_hot(idx[..., slot], E, dtype=jnp.float32)  # (G,sg,E)
+        pos = jnp.cumsum(oh, axis=1) - 1.0 + counts[:, None, :]
+        keep = (pos < C) & (oh > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        combine = combine + (
+            gates[..., slot, None, None]
+            * jnp.where(keep, oh, 0.0)[..., None]
+            * pos_oh
+        )
+        counts = counts + jnp.sum(oh, axis=1)
+
+    cd = cfg.compute_dtype
+    dispatch = (combine > 0).astype(cd)                      # (G,sg,E,C)
+    # --- dispatch -> expert FFN -> combine ---
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(cd))
+    h = _act(cfg.act)(jnp.einsum("egcd,edf->egcf", xin,
+                                 params["w_gate"].astype(cd)))
+    h = h * jnp.einsum("egcd,edf->egcf", xin, params["w_in"].astype(cd))
+    eo = jnp.einsum("egcf,efd->egcd", h, params["w_out"].astype(cd))
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(cd), eo)
+
+    if "shared" in params:
+        sp = params["shared"]
+        hs = _act(cfg.act)(jnp.einsum("gsd,df->gsf", xg, sp["w_gate"].astype(cd)))
+        hs = hs * jnp.einsum("gsd,df->gsf", xg, sp["w_in"].astype(cd))
+        y = y + jnp.einsum("gsf,fd->gsd", hs, sp["w_out"].astype(cd))
+
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_layer_dense_oracle(params, x, cfg):
+    """O(E) oracle: run EVERY expert on every token, weight by full top-k
+    gates, no capacity drops. For tests (small configs only)."""
+    m = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    w = jnp.zeros_like(probs).at[
+        jnp.arange(x.shape[0])[:, None, None],
+        jnp.arange(x.shape[1])[None, :, None], idx].set(gates)
+    h = _act(cfg.act)(jnp.einsum("bsd,edf->besf", x, params["w_gate"]))
+    h = h * jnp.einsum("bsd,edf->besf", x, params["w_in"])
+    eo = jnp.einsum("besf,efd->besd", h, params["w_out"])
+    y = jnp.einsum("bse,besd->bsd", w.astype(x.dtype), eo)
+    if "shared" in params:
+        sp = params["shared"]
+        hs = _act(cfg.act)(jnp.einsum("bsd,df->bsf", x, sp["w_gate"]))
+        hs = hs * jnp.einsum("bsd,df->bsf", x, sp["w_in"])
+        y = y + jnp.einsum("bsf,fd->bsd", hs, sp["w_out"])
+    return y

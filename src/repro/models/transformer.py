@@ -1,0 +1,304 @@
+"""Config-driven layer-stack assembler covering all assigned families.
+
+A stack is a list of Segments; each Segment is a repeated *pattern* of
+layers, scanned with lax.scan (remat-wrapped) so the HLO stays one-pattern
+sized regardless of depth. A layer is an ordered tuple of sublayer kinds:
+
+    ("attn","mlp")          dense transformer layer
+    ("attn","moe")          MoE transformer layer
+    ("attn","cross","mlp")  whisper decoder layer
+    ("rwkv",)               RWKV6 block
+    ("mamba",)              Mamba2 block
+    ("mamba","shared_attn") zamba2: mamba + the weight-SHARED attention block
+
+Shared-attention weights live outside the scanned stacks and are closed
+over, so all invocations reuse one copy (Zamba2 semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as att
+from repro.models import layers as L
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwk
+from repro.models.layers import P
+from repro.sharding.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: tuple  # tuple of layer tuples
+    repeats: int
+
+
+# ---------------------------------------------------------------------------
+# Stack plans
+# ---------------------------------------------------------------------------
+
+def stack_plan(cfg) -> list[Segment]:
+    Lc = cfg.num_layers
+    if cfg.ssm is not None and cfg.shared_attn_every:
+        k = cfg.shared_attn_every
+        pattern = (("mamba",),) * (k - 1) + (("mamba", "shared_attn"),)
+        full, tail = divmod(Lc, k)
+        segs = []
+        if full:
+            segs.append(Segment(pattern, full))
+        if tail:
+            segs.append(Segment((("mamba",),), tail))
+        return segs
+    if cfg.ssm is not None:
+        kind = "rwkv" if cfg.ssm.kind == "rwkv6" else "mamba"
+        return [Segment(((kind,),), Lc)]
+    if cfg.moe is not None:
+        m = cfg.moe
+        segs = []
+        rest = Lc - m.first_dense
+        if m.first_dense:
+            segs.append(Segment((("attn", "mlp"),), m.first_dense))
+        if m.every_k_layers > 1:
+            pat = (("attn", "mlp"),) * (m.every_k_layers - 1) + (("attn", "moe"),)
+            segs.append(Segment(pat, rest // m.every_k_layers))
+        else:
+            segs.append(Segment((("attn", "moe"),), rest))
+        return segs
+    if cfg.is_encdec:
+        return [Segment((("attn", "cross", "mlp"),), Lc)]  # decoder
+    return [Segment((("attn", "mlp"),), Lc)]
+
+
+def encoder_plan(cfg) -> list[Segment]:
+    return [Segment((("attn", "mlp"),), cfg.encoder_layers)]
+
+
+# ---------------------------------------------------------------------------
+# Sublayer schemas
+# ---------------------------------------------------------------------------
+
+def _sublayer_schema(kind: str, cfg):
+    if kind == "attn" or kind == "cross":
+        return {"norm": L.norm_schema(cfg.d_model, cfg.norm_type),
+                "attn": att.attention_schema(cfg)}
+    if kind == "mlp":
+        return {"norm": L.norm_schema(cfg.d_model, cfg.norm_type),
+                "mlp": L.mlp_schema(cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated,
+                                    bias=cfg.proj_bias)}
+    if kind == "moe":
+        return {"norm": L.norm_schema(cfg.d_model, cfg.norm_type),
+                "moe": moe_mod.moe_schema(cfg)}
+    if kind == "rwkv":
+        return rwk.rwkv_block_schema(cfg)
+    if kind == "mamba":
+        return mam.mamba_block_schema(cfg)
+    if kind == "shared_attn":
+        return {}  # weights are shared; provided separately
+    raise ValueError(kind)
+
+
+def _pattern_schema(pattern, cfg):
+    s = {}
+    for li, layer in enumerate(pattern):
+        for kind in layer:
+            sub = _sublayer_schema(kind, cfg)
+            if sub:
+                s[f"l{li}_{kind}"] = sub
+    return s
+
+
+def stack_schema(cfg, plan) -> dict:
+    return {f"seg{i}": L.stack_schema(seg.repeats, _pattern_schema(seg.pattern, cfg))
+            for i, seg in enumerate(plan)}
+
+
+def shared_attn_schema(cfg):
+    return {
+        "norm1": L.norm_schema(cfg.d_model, cfg.norm_type),
+        "attn": att.attention_schema(cfg),
+        "norm2": L.norm_schema(cfg.d_model, cfg.norm_type),
+        "mlp": L.mlp_schema(cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated,
+                            bias=cfg.proj_bias),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache schemas
+# ---------------------------------------------------------------------------
+
+def _sublayer_cache_schema(kind: str, cfg, batch: int, max_len: int):
+    KV, dh = cfg.num_kv_heads, cfg.hd
+    kv_axes = ("batch", "seq", "kv_heads", "head_dim")
+    if kind in ("attn", "shared_attn"):
+        # sliding-window archs only ever attend to the last `window` keys:
+        # allocate a RING buffer (beyond-paper: 500k-token decode holds a
+        # window-sized cache, 128x smaller for danube long_500k)
+        slots = max_len
+        if cfg.sliding_window and cfg.sliding_window < max_len:
+            slots = cfg.sliding_window
+        return {"k": P((batch, slots, KV, dh), kv_axes, 0.0, cfg.compute_dtype),
+                "v": P((batch, slots, KV, dh), kv_axes, 0.0, cfg.compute_dtype)}
+    if kind == "rwkv":
+        return rwk.rwkv_state_schema(cfg, batch)
+    if kind == "mamba":
+        return mam.mamba_state_schema(cfg, batch)
+    if kind == "cross":
+        # encoder K/V cache: computed ONCE at prefill, reused every decoded
+        # token (the §Roofline useful-ratio metric flagged the recompute)
+        return {"ek": P((batch, cfg.enc_ctx, KV, dh), kv_axes, 0.0,
+                        cfg.compute_dtype),
+                "ev": P((batch, cfg.enc_ctx, KV, dh), kv_axes, 0.0,
+                        cfg.compute_dtype)}
+    return None  # mlp / moe: stateless
+
+
+def cache_schema(cfg, plan, batch: int, max_len: int) -> dict:
+    out = {}
+    for i, seg in enumerate(plan):
+        s = {}
+        for li, layer in enumerate(seg.pattern):
+            for kind in layer:
+                cs = _sublayer_cache_schema(kind, cfg, batch, max_len)
+                if cs:
+                    s[f"l{li}_{kind}"] = cs
+        out[f"seg{i}"] = L.stack_schema(seg.repeats, s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: Any
+    mode: str                   # train | prefill | decode
+    positions: Any              # (B,S) or (B,S,3)
+    cache_len: Any = None       # traced scalar (decode)
+    causal: bool = True
+    enc_out: Any = None         # encoder output for cross sublayers
+    shared: Any = None          # shared-attn params (zamba)
+
+
+def _zero_state(schema):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype or jnp.float32),
+                        schema, is_leaf=lambda s: isinstance(s, P))
+
+
+def _apply_sublayer(kind, params, x, cache, ctx):
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        h = L.apply_norm(params["norm"], x, kind=cfg.norm_type, eps=cfg.norm_eps)
+        kv = (cache["k"], cache["v"]) if cache else None
+        out, new_kv = att.attention_block(
+            params["attn"], h, cfg=cfg, positions=ctx.positions,
+            causal=ctx.causal, cache=kv, cache_len=ctx.cache_len)
+        new_cache = {"k": new_kv[0], "v": new_kv[1]} if new_kv else cache
+        return x + out, new_cache, aux
+    if kind == "cross":
+        h = L.apply_norm(params["norm"], x, kind=cfg.norm_type, eps=cfg.norm_eps)
+        if ctx.mode == "decode" and cache is not None:
+            ek, ev = cache["ek"], cache["ev"]     # prefilled encoder K/V
+        else:
+            ek = jnp.einsum("bsd,dke->bske", ctx.enc_out,
+                            params["attn"]["wk"].astype(ctx.enc_out.dtype))
+            ev = jnp.einsum("bsd,dke->bske", ctx.enc_out,
+                            params["attn"]["wv"].astype(ctx.enc_out.dtype))
+            if "bk" in params["attn"]:
+                ek = ek + params["attn"]["bk"].astype(ek.dtype)
+                ev = ev + params["attn"]["bv"].astype(ev.dtype)
+        out, _ = att.attention_block(params["attn"], h, cfg=cfg,
+                                     positions=ctx.positions,
+                                     cross_kv=(ek, ev))
+        new_cache = cache
+        if cache is not None and ctx.mode == "prefill":
+            new_cache = {"ek": ek.astype(cache["ek"].dtype),
+                         "ev": ev.astype(cache["ev"].dtype)}
+        return x + out, new_cache, aux
+    if kind == "mlp":
+        h = L.apply_norm(params["norm"], x, kind=cfg.norm_type, eps=cfg.norm_eps)
+        return x + L.apply_mlp(params["mlp"], h, act=cfg.act), cache, aux
+    if kind == "moe":
+        h = L.apply_norm(params["norm"], x, kind=cfg.norm_type, eps=cfg.norm_eps)
+        out, aux = moe_mod.moe_layer(params["moe"], h, cfg)
+        return x + out, cache, aux
+    if kind == "rwkv":
+        if cache is None:
+            cache = _zero_state(rwk.rwkv_state_schema(cfg, x.shape[0]))
+        out, new_state = rwk.rwkv_block(params, x, cache, cfg, mode=ctx.mode)
+        return out, new_state, aux
+    if kind == "mamba":
+        if cache is None:
+            cache = _zero_state(mam.mamba_state_schema(cfg, x.shape[0]))
+        out, new_state = mam.mamba_block(params, x, cache, cfg, mode=ctx.mode)
+        return out, new_state, aux
+    if kind == "shared_attn":
+        sp = ctx.shared
+        h = L.apply_norm(sp["norm1"], x, kind=cfg.norm_type, eps=cfg.norm_eps)
+        kv = (cache["k"], cache["v"]) if cache else None
+        out, new_kv = att.attention_block(
+            sp["attn"], h, cfg=cfg, positions=ctx.positions,
+            causal=ctx.causal, cache=kv, cache_len=ctx.cache_len)
+        x = x + out
+        h = L.apply_norm(sp["norm2"], x, kind=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + L.apply_mlp(sp["mlp"], h, act=cfg.act)
+        new_cache = {"k": new_kv[0], "v": new_kv[1]} if new_kv else cache
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+def _remat_policy(cfg):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def apply_stack(stack_params, x, plan, ctx, cache=None):
+    """Run all segments. Returns (x, new_cache, total_aux)."""
+    cfg = ctx.cfg
+    total_aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+
+    for i, seg in enumerate(plan):
+        seg_params = stack_params[f"seg{i}"]
+        seg_cache = (cache or {}).get(f"seg{i}", {})
+
+        def repeat_body(x, layer_params, layer_cache, seg=seg):
+            aux = jnp.zeros((), jnp.float32)
+            new_layer_cache = {}
+            for li, layer in enumerate(seg.pattern):
+                for kind in layer:
+                    key = f"l{li}_{kind}"
+                    p = layer_params.get(key, {})
+                    c = layer_cache.get(key)
+                    x, c_new, a = _apply_sublayer(kind, p, x, c, ctx)
+                    aux = aux + a
+                    if c_new is not None and key in layer_cache:
+                        new_layer_cache[key] = c_new
+            return x, new_layer_cache, aux
+
+        policy = _remat_policy(cfg)
+        if policy is not None:
+            repeat_body = jax.checkpoint(
+                repeat_body, policy=policy, static_argnums=())
+
+        def scan_body(carry, xs):
+            x, aux = carry
+            layer_params, layer_cache = xs
+            x = constrain(x, "btd")
+            x, new_layer_cache, a = repeat_body(x, layer_params, layer_cache)
+            return (x, aux + a), new_layer_cache
+
+        (x, total_aux), seg_cache_new = jax.lax.scan(
+            scan_body, (x, total_aux), (seg_params, seg_cache))
+        new_cache[f"seg{i}"] = seg_cache_new
+
+    return x, (new_cache if cache is not None else None), total_aux

@@ -1,0 +1,129 @@
+"""Fault-tolerance runtime logic: heartbeats, straggler detection, elastic
+re-meshing, and a supervised step-retry loop.
+
+Everything here is pure decision logic + a supervisor wrapper, unit-tested
+at small scale; the cluster hooks (GCS heartbeat bus, pod manager API) are
+the documented integration surface. The policies are the ones that matter
+at 1000+ nodes:
+
+  * heartbeat timeout => worker declared dead, elastic plan recomputed;
+  * straggler = worker whose step time exceeds `straggler_factor` x the
+    rolling median — persistent stragglers are evicted BEFORE they fail
+    (tail-latency mitigation);
+  * elastic plan keeps the model (TP) axis intact — it must match the
+    sharded layer dims — and shrinks/grows the data axis to the largest
+    power of two that the healthy-worker count supports;
+  * recovery = restore-latest-checkpoint on the new mesh (the elastic
+    reshard path of checkpoint/ckpt.py) + deterministic data replay
+    (data/pipeline.py makes batches a pure function of step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 30.0
+    _last: dict = dataclasses.field(default_factory=dict)
+
+    def beat(self, worker: int, t: Optional[float] = None):
+        self._last[worker] = time.monotonic() if t is None else t
+
+    def dead(self, now: Optional[float] = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(w for w, t in self._last.items()
+                      if now - t > self.timeout_s)
+
+    def alive(self, now: Optional[float] = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(w for w, t in self._last.items()
+                      if now - t <= self.timeout_s)
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    window: int = 20
+    straggler_factor: float = 2.0
+    evict_after: int = 3
+    _times: dict = dataclasses.field(default_factory=dict)
+    _strikes: dict = dataclasses.field(default_factory=dict)
+
+    def record(self, worker: int, step_time_s: float):
+        self._times.setdefault(worker, []).append(step_time_s)
+        self._times[worker] = self._times[worker][-self.window:]
+
+    def _median_of_medians(self) -> float:
+        meds = sorted(sorted(v)[len(v) // 2] for v in self._times.values()
+                      if v)
+        return meds[len(meds) // 2] if meds else 0.0
+
+    def stragglers(self) -> list[int]:
+        med = self._median_of_medians()
+        if med <= 0:
+            return []
+        out = []
+        for w, v in self._times.items():
+            if v and sorted(v)[len(v) // 2] > self.straggler_factor * med:
+                self._strikes[w] = self._strikes.get(w, 0) + 1
+                if self._strikes[w] >= self.evict_after:
+                    out.append(w)
+            else:
+                self._strikes[w] = 0
+        return sorted(out)
+
+
+def elastic_plan(n_healthy_chips: int, *, model_axis: int = 16,
+                 pods_of: int = 256) -> dict:
+    """Largest (pod, data, model) mesh the healthy chips support.
+
+    TP ('model') stays fixed (weight shards match it); DP shrinks to the
+    largest power of two; full pods are preferred (ICI locality).
+    """
+    assert n_healthy_chips >= model_axis
+    pods = max(1, n_healthy_chips // pods_of)
+    per_pod = min(n_healthy_chips // pods, pods_of)
+    data = 1
+    while data * 2 * model_axis <= per_pod:
+        data *= 2
+    return {"pod": pods, "data": data, "model": model_axis,
+            "chips": pods * data * model_axis,
+            "spare": n_healthy_chips - pods * data * model_axis}
+
+
+@dataclasses.dataclass
+class Supervisor:
+    """Wraps a step function with retry + checkpoint-restore recovery."""
+    save_fn: Callable        # (state, step) -> None
+    restore_fn: Callable     # (step) -> state
+    ckpt_every: int = 100
+    max_retries: int = 3
+
+    def run(self, state, step_fn, batches, n_steps: int, *, start_step: int = 0,
+            inject_failure: Optional[Callable] = None):
+        """Deterministic replay: on failure, restore the last checkpoint and
+        re-run from its step. `inject_failure(step)` raising simulates a
+        node loss (tests)."""
+        step = start_step
+        last_ckpt = start_step
+        retries = 0
+        metrics = None
+        while step < n_steps:
+            try:
+                if inject_failure is not None:
+                    inject_failure(step)
+                state, metrics = step_fn(state, batches(step))
+                step += 1
+                if step % self.ckpt_every == 0:
+                    self.save_fn(state, step)
+                    last_ckpt = step
+                    retries = 0
+            except RuntimeError:
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                state = self.restore_fn(last_ckpt)
+                step = last_ckpt
+        return state, step, metrics

@@ -1,0 +1,80 @@
+"""Serving steps: batched prefill and single-token decode with a sharded KV
+cache (or SSM state), pjit-ready with full sharding trees.
+
+Serving layout (see sharding/rules.py): weights TP-sharded over `model` and
+replicated over `data`; requests sharded over (pod, data); KV cache sharded
+over kv-heads when they divide the TP degree, otherwise over the *sequence*
+axis — the flash-decoding layout: each model-rank attends to its slice of
+the context and XLA's SPMD partitioner inserts the small (m, l) softmax-
+combine all-reduces instead of an all-gather of the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import abstract_cache, layers as L
+from repro.models import transformer as tfm
+from repro.sharding import ctx as shard_ctx
+from repro.sharding.rules import Strategy, sharding_tree, replicated
+from repro.train.step import batch_shardings_for
+
+
+@dataclasses.dataclass
+class ServeBundle:
+    prefill_fn: Any
+    decode_fn: Any
+    abstract_params: Any
+    abstract_cache: Any
+    param_shardings: Any
+    cache_shardings: Any
+    mesh: Any
+
+
+def make_serve_step(model, mesh, batch_tree: dict, *, batch_size: int,
+                    max_len: int, strategy: Strategy | None = None):
+    cfg = model.cfg
+    strategy = strategy or Strategy("serve")
+
+    ax = L.axes_tree(model.schema)
+    # serve with bf16 weights (deployment-realistic; params are cast on load)
+    abs_params = L.abstract_params(model.schema, cfg.compute_dtype)
+    param_sh = sharding_tree(ax, abs_params, mesh, strategy)
+
+    cache_schema = model.cache_schema(batch_size, max_len)
+    cache_ax = L.axes_tree(cache_schema)
+    abs_cache = L.abstract_params(cache_schema, jnp.float32)
+    # honour per-leaf dtypes in the cache schema
+    abs_cache = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or jnp.float32),
+        cache_schema, is_leaf=lambda x: hasattr(x, "axes"))
+    cache_sh = sharding_tree(cache_ax, abs_cache, mesh, strategy)
+    batch_sh = batch_shardings_for(batch_tree, mesh, strategy)
+
+    def _prefill(params, batch, cache):
+        shard_ctx.install(mesh, strategy.name)
+        return model.prefill(params, batch, cache)
+
+    def _decode(params, batch, cache):
+        shard_ctx.install(mesh, strategy.name)
+        return model.decode(params, batch, cache)
+
+    prefill_fn = jax.jit(
+        _prefill,
+        in_shardings=(param_sh, batch_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    decode_fn = jax.jit(
+        _decode,
+        in_shardings=(param_sh, batch_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    return ServeBundle(prefill_fn=prefill_fn, decode_fn=decode_fn,
+                       abstract_params=abs_params, abstract_cache=abs_cache,
+                       param_shardings=param_sh, cache_shardings=cache_sh,
+                       mesh=mesh)

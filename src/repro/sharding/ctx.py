@@ -1,0 +1,71 @@
+"""Logical activation-sharding constraints (context-scoped).
+
+XLA SPMD propagates operand shardings, but conflicts make it drop them: the
+FSDP-sharded embedding table (embed -> data) meets the batch-sharded token
+ids (batch -> data) at the very first gather, and the batch sharding LOSES —
+every activation downstream is then replicated over the data axis (found via
+the §Roofline byte dissection: global-batch-shaped tensors in the per-device
+HLO). The standard fix (MaxText-style) is explicit logical constraints on
+activations.
+
+The step factories install a spec table for the current mesh; model code
+calls ``constrain(x, "btd")`` etc. — a no-op outside any installed context,
+so smoke tests and CPU examples are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_SPECS: Optional[dict] = None
+
+
+def make_activation_specs(mesh, strategy: str = "train") -> dict:
+    names = set(mesh.axis_names)
+    if strategy in ("fsdp", "serve_fsdp"):
+        dp = tuple(a for a in ("pod", "data", "model") if a in names)
+        tp = None            # weights are gathered; no TP-sharded activations
+    else:
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        tp = "model" if "model" in names else None
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return {
+        # (batch, seq, d_model) activations: batch over DP, rest replicated
+        "btd": NamedSharding(mesh, P(dp_entry, None, None)),
+        # (batch, seq) token planes
+        "bt": NamedSharding(mesh, P(dp_entry, None)),
+        # (batch, seq, vocab) logits: vocab over TP
+        "btv": NamedSharding(mesh, P(dp_entry, None, tp)),
+        # (batch, seq, heads, head_dim): heads over TP
+        "bthd": NamedSharding(mesh, P(dp_entry, None, tp, None)),
+    }
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, strategy: str = "train"):
+    global _SPECS
+    prev = _SPECS
+    _SPECS = make_activation_specs(mesh, strategy)
+    try:
+        yield
+    finally:
+        _SPECS = prev
+
+
+def install(mesh, strategy: str = "train"):
+    """Non-contextual install (step factories trace inside jit.lower)."""
+    global _SPECS
+    _SPECS = make_activation_specs(mesh, strategy) if mesh is not None \
+        else None
+
+
+def constrain(x, kind: str):
+    if _SPECS is None or kind not in _SPECS:
+        return x
+    sh = _SPECS[kind]
+    if x.ndim != len(sh.spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,154 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Each parameter/cache/input tensor carries a tuple of logical axis names (see
+models/layers.py). A Strategy maps those names to mesh axes with
+divisibility-aware fallbacks, producing NamedShardings for pjit.
+
+Train strategy (FSDP x TP, DP over pod+data):
+    batch -> (pod, data);  heads/kv_heads/vocab/mlp/experts -> model (TP/EP);
+    embed -> data (ZeRO-3 parameter sharding, gathered per-layer inside the
+    scan over layers);  layers/head_dim/state/... -> replicated.
+
+Serve strategy (TP only, weights replicated across data for low-latency):
+    batch -> (pod, data);  heads/... -> model;  cache seq -> model when the
+    kv-head count does not divide the TP degree (sequence-sharded KV cache =
+    flash-decoding layout), or -> data when batch cannot use it (long_500k).
+
+Uneven dims (e.g. 56 heads over 16-way model axis) are allowed on weight-
+like axes — XLA SPMD pads internally; the padding waste is accounted in the
+roofline "useful-FLOPs" ratio. Batch/seq axes require exact divisibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+# logical name -> ordered candidate lists of mesh-axis groups
+_TRAIN_CANDIDATES = {
+    "batch": [("pod", "data"), ("data",), ("pod",)],
+    "vocab": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "mlp": [("model",)],
+    "experts": [("model",)],
+    "embed": [("data",)],          # FSDP / ZeRO-3
+    "seq": [],
+    "expert_mlp": [],
+    "layers": [], "head_dim": [], "conv": [], "state": [], "pos": [],
+}
+
+_SERVE_CANDIDATES = {
+    **_TRAIN_CANDIDATES,
+    "embed": [],                   # weights replicated across data when serving
+    "seq": [("model",), ("data",), ("pod",)],  # cache fallback (flash-decode)
+}
+
+# Pure-FSDP (ZeRO-3) layout: batch over EVERY axis, weights fully sharded
+# for storage and all-gathered per layer (XLA inserts the AG when the
+# batch-everywhere activation constraint meets sharded weights). Trades the
+# per-layer Megatron activation all-reduce (2x tokens x d_model) for a
+# per-layer weight all-gather (layer params, overlappable) — the better deal
+# whenever tokens/device x 16 > params/layer, i.e. for all train_4k cells.
+_FSDP_CANDIDATES = {
+    "batch": [("pod", "data", "model"), ("data", "model"), ("data",)],
+    "vocab": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "mlp": [("model",)],
+    "experts": [("model",)],
+    "embed": [("data",)],
+    "seq": [],
+    "expert_mlp": [],
+    "layers": [], "head_dim": [], "conv": [], "state": [], "pos": [],
+}
+
+# pjit requires argument dims to divide the mesh axis exactly; dims that
+# don't (e.g. whisper's 51865 vocab) fall through to the next candidate or
+# replication. Query-head counts are made divisible by grouped padding in
+# models/attention.py (cfg.tp_pad).
+_ALLOW_UNEVEN: set = set()
+
+# assignment priority: lower = assigned first (gets first pick of mesh axes)
+_PRIORITY = {"batch": 0, "vocab": 1, "heads": 1, "kv_heads": 1, "mlp": 1,
+             "experts": 1, "seq": 2, "embed": 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str = "train"            # train | serve
+
+    def candidates(self):
+        return {"train": _TRAIN_CANDIDATES,
+                "serve": _SERVE_CANDIDATES,
+                "fsdp": _FSDP_CANDIDATES,
+                "serve_fsdp": _FSDP_CANDIDATES}[self.name]
+
+
+def spec_for(axes, shape, mesh, strategy: Strategy) -> PartitionSpec:
+    """Greedy divisibility-aware assignment of mesh axes to tensor dims."""
+    return _spec(axes, shape, mesh, strategy)
+
+
+def _spec(axes, shape, mesh, strategy):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cands = strategy.candidates()
+    order = sorted([i for i, n in enumerate(axes) if n],
+                   key=lambda i: _PRIORITY.get(axes[i], 9))
+    entries: dict[int, tuple] = {}
+    used: set = set()
+    for i in order:
+        name = axes[i]
+        for group in cands.get(name, []):
+            if any(a not in sizes or a in used for a in group):
+                continue
+            prod = 1
+            for a in group:
+                prod *= sizes[a]
+            if shape[i] < prod:
+                continue
+            if shape[i] % prod != 0 and name not in _ALLOW_UNEVEN:
+                continue
+            entries[i] = group
+            used.update(group)
+            break
+    parts = []
+    for i in range(len(axes)):
+        if i not in entries:
+            parts.append(None)
+        elif len(entries[i]) == 1:
+            parts.append(entries[i][0])
+        else:
+            parts.append(entries[i])
+    return PartitionSpec(*parts)
+
+
+def sharding_tree(schema_axes, abstract_tree, mesh, strategy: Strategy):
+    """axes pytree (tuples) + ShapeDtypeStruct pytree -> NamedSharding pytree."""
+    def one(axes, sds):
+        return NamedSharding(mesh, _spec(axes, sds.shape, mesh, strategy))
+
+    return jax.tree.map(
+        one, schema_axes, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def batch_sharding(mesh, strategy: Strategy, *, ndim: int, batch_divisible: bool):
+    """Sharding for a (B, ...) input tensor: batch over (pod,data) if it
+    divides, else replicated."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for group in strategy.candidates()["batch"]:
+        if all(a in sizes for a in group):
+            spec = [group if len(group) > 1 else group[0]] + [None] * (ndim - 1)
+            return NamedSharding(mesh, PartitionSpec(*spec)) if batch_divisible \
+                else replicated(mesh)
+    return replicated(mesh)

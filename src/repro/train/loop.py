@@ -1,0 +1,67 @@
+"""Training loop: deterministic data replay + periodic (async) checkpoints
++ straggler/heartbeat bookkeeping + optional compressed-DP hooks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.runtime.fault import StragglerDetector
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    n_steps: int = 100
+    ckpt_every: int = 0               # 0 = disabled
+    ckpt_dir: str = "checkpoints"
+    log_every: int = 10
+    async_ckpt: bool = True
+
+
+def train(model, bundle, data_cfg: DataConfig, loop_cfg: LoopConfig,
+          state=None, *, log: Optional[Callable] = print):
+    """bundle: StepBundle from train/step.py. Resumes from the latest
+    checkpoint if one exists. Returns (state, history)."""
+    loader = ShardedLoader(data_cfg)
+    start = 0
+    if loop_cfg.ckpt_every:
+        last = ckpt_lib.latest_step(loop_cfg.ckpt_dir)
+        if last is not None:
+            state = ckpt_lib.restore(loop_cfg.ckpt_dir, last,
+                                     bundle.abstract_state,
+                                     bundle.state_shardings)
+            start = last
+            if log:
+                log(f"[train] resumed from step {last}")
+    assert state is not None, "no initial state and no checkpoint"
+
+    det = StragglerDetector()
+    history = []
+    pending = None
+    for step in range(start, loop_cfg.n_steps):
+        batch = loader.batch(step)
+        t0 = time.perf_counter()
+        state, metrics = bundle.step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        det.record(0, dt)
+        if loop_cfg.log_every and (step + 1) % loop_cfg.log_every == 0:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            history.append({"step": step + 1, "time_s": dt, **m})
+            if log:
+                log(f"[train] step {step + 1} loss={m['loss']:.4f} "
+                    f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.2f} "
+                    f"({dt * 1e3:.0f} ms)")
+        if loop_cfg.ckpt_every and (step + 1) % loop_cfg.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            _, pending = ckpt_lib.save(state, step + 1, loop_cfg.ckpt_dir,
+                                       async_write=loop_cfg.async_ckpt)
+    if pending is not None:
+        pending.join()
+    return state, history

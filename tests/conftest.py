@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — tests and benches must see the real
+# (single-CPU) device set; only launch/dryrun.py forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

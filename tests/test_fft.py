@@ -1,0 +1,89 @@
+"""FFT core + Pallas kernel: numpy oracle sweeps + spectral properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fft as F
+from repro.kernels.fft.ops import fft as kfft, rfft as krfft
+
+
+@pytest.mark.parametrize("n", [8, 64, 256, 1024])
+@pytest.mark.parametrize("variant", ["stockham", "bitrev"])
+def test_core_fft_vs_numpy(n, variant, rng):
+    x = (rng.normal(size=(3, n)) + 1j * rng.normal(size=(3, n))).astype(
+        np.complex64)
+    fn = F.fft if variant == "stockham" else F.fft_bitrev
+    rr, ri = fn(jnp.asarray(x.real), jnp.asarray(x.imag))
+    ref = np.fft.fft(x)
+    err = np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref).max()
+    assert err / np.abs(ref).max() < 1e-4
+
+
+@pytest.mark.parametrize("n", [64, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_fft_shapes_dtypes(n, dtype, rng):
+    x = (rng.normal(size=(8, n)) + 1j * rng.normal(size=(8, n)))
+    re = jnp.asarray(x.real).astype(dtype)
+    im = jnp.asarray(x.imag).astype(dtype)
+    rr, ri = kfft(re, im)
+    assert rr.shape == (8, n) and rr.dtype == dtype
+    ref = np.fft.fft(np.asarray(re, np.float32)
+                     + 1j * np.asarray(im, np.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 0.05
+    err = np.abs((np.asarray(rr, np.float64) + 1j * np.asarray(ri, np.float64))
+                 - ref).max() / np.abs(ref).max()
+    assert err < tol, err
+
+
+def test_kernel_ifft_roundtrip(rng):
+    x = rng.normal(size=(4, 256)).astype(np.float32)
+    rr, ri = kfft(jnp.asarray(x), jnp.zeros_like(jnp.asarray(x)))
+    br, bi = kfft(rr, ri, inverse=True)
+    np.testing.assert_allclose(np.asarray(br), x, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(bi), 0, atol=2e-5)
+
+
+@pytest.mark.parametrize("n", [64, 512, 2048])
+def test_rfft_packed(n, rng):
+    x = rng.normal(size=(2, n)).astype(np.float32)
+    for impl in (F.rfft_packed, krfft):
+        Rr, Ri = impl(jnp.asarray(x))
+        ref = np.fft.rfft(x)
+        err = np.abs((np.asarray(Rr) + 1j * np.asarray(Ri)) - ref).max()
+        assert err / np.abs(ref).max() < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 9), st.integers(0, 2 ** 31 - 1))
+def test_fft_linearity(logn, seed):
+    n = 1 << logn
+    r = np.random.default_rng(seed)
+    a = r.normal(size=n).astype(np.float32)
+    b = r.normal(size=n).astype(np.float32)
+    fa = F.fft(jnp.asarray(a))
+    fb = F.fft(jnp.asarray(b))
+    fab = F.fft(jnp.asarray(2 * a + 3 * b))
+    np.testing.assert_allclose(np.asarray(fab[0]),
+                               2 * np.asarray(fa[0]) + 3 * np.asarray(fb[0]),
+                               atol=1e-3 * max(1, np.abs(fab[0]).max()))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 9), st.integers(0, 2 ** 31 - 1))
+def test_fft_parseval(logn, seed):
+    n = 1 << logn
+    r = np.random.default_rng(seed)
+    x = r.normal(size=n).astype(np.float32)
+    rr, ri = F.fft(jnp.asarray(x))
+    e_time = float(np.sum(x ** 2))
+    e_freq = float(np.sum(np.asarray(rr) ** 2 + np.asarray(ri) ** 2)) / n
+    assert abs(e_time - e_freq) < 1e-2 * max(1.0, e_time)
+
+
+def test_fft_impulse():
+    x = np.zeros(128, np.float32)
+    x[0] = 1.0
+    rr, ri = F.fft(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(rr), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ri), 0.0, atol=1e-5)

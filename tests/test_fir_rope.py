@@ -1,0 +1,84 @@
+"""FIR + RoPE kernels: oracle sweeps + LTI / rotation properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fir import fir_direct, fir_reference, lowpass_taps
+from repro.kernels.fir.ops import fir as kfir
+from repro.kernels.rope.ops import rope as krope
+from repro.kernels.rope.ref import rope_ref
+
+
+@pytest.mark.parametrize("shape,seq_block", [((4, 512), 128), ((1, 2048), 512),
+                                             ((8, 1024), 1024), ((2, 256), 256)])
+@pytest.mark.parametrize("k", [3, 11])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fir_kernel_sweep(shape, seq_block, k, dtype, rng):
+    x = jnp.asarray(rng.normal(size=shape)).astype(dtype)
+    taps = jnp.asarray(lowpass_taps(k))
+    got = kfir(x, taps, seq_block=seq_block)
+    want = fir_direct(x.astype(jnp.float32), taps)
+    tol = 1e-5 if dtype == jnp.float32 else 0.02
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_fir_direct_vs_convolve(rng):
+    x = rng.normal(size=(3, 300)).astype(np.float32)
+    taps = lowpass_taps(11)
+    got = fir_direct(jnp.asarray(x), jnp.asarray(taps))
+    want = fir_reference(x, taps)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 30))
+def test_fir_shift_invariance(seed, shift):
+    """LTI: delaying the input delays the output (up to edge effects)."""
+    r = np.random.default_rng(seed)
+    x = r.normal(size=256).astype(np.float32)
+    taps = jnp.asarray(lowpass_taps(7))
+    y = np.asarray(fir_direct(jnp.asarray(x), taps))
+    xs = np.concatenate([np.zeros(shift, np.float32), x])[:256]
+    ys = np.asarray(fir_direct(jnp.asarray(xs), taps))
+    np.testing.assert_allclose(ys[shift:], y[: 256 - shift], atol=1e-5)
+
+
+@pytest.mark.parametrize("dh", [32, 64, 128])
+@pytest.mark.parametrize("layout", ["interleaved", "neox"])
+def test_rope_kernel_sweep(dh, layout, rng):
+    x = jnp.asarray(rng.normal(size=(96, dh)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, 4096, 96).astype(np.int32))
+    got = krope(x, pos, layout=layout)
+    want = rope_ref(x, pos, layout=layout)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-3, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 512))
+def test_rope_preserves_norm(seed, p):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(4, 64)).astype(np.float32))
+    pos = jnp.full((4,), p, jnp.int32)
+    out = rope_ref(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 100), st.integers(0, 100),
+       st.integers(0, 50))
+def test_rope_relative_position(seed, m, n, d):
+    """<rope(q,m+d), rope(k,n+d)> == <rope(q,m), rope(k,n)> — the defining
+    relative-position property."""
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(1, 64)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(1, 64)).astype(np.float32))
+    dot = lambda mm, nn: float(np.sum(
+        np.asarray(rope_ref(q, jnp.asarray([mm], jnp.int32)))
+        * np.asarray(rope_ref(k, jnp.asarray([nn], jnp.int32)))))
+    assert abs(dot(m + d, n + d) - dot(m, n)) < 5e-3 * max(
+        1.0, abs(dot(m, n)))

@@ -1,0 +1,60 @@
+"""Flash-attention Pallas kernel: shape/dtype/GQA/window sweeps vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+@pytest.mark.parametrize("shapes", [
+    (2, 256, 8, 4, 64),    # GQA group 2
+    (1, 128, 4, 4, 32),    # MHA
+    (2, 256, 8, 2, 64),    # GQA group 4
+    (1, 512, 4, 1, 128),   # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_reference(shapes, causal, rng):
+    B, S, H, KV, dh = shapes
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, q_chunk=64, kv_chunk=64)
+    want = flash_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("window", [32, 96])
+def test_flash_sliding_window(window, rng):
+    q = jnp.asarray(rng.normal(size=(2, 256, 4, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 256, 2, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 256, 2, 32)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          q_chunk=64, kv_chunk=64)
+    want = flash_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_flash_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 128, 4, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 64))).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, q_chunk=64, kv_chunk=64)
+    assert got.dtype == jnp.bfloat16
+    want = flash_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=0.03, rtol=0.03)
+
+
+def test_flash_cross_chunk_sizes(rng):
+    q = jnp.asarray(rng.normal(size=(1, 256, 2, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 32)).astype(np.float32))
+    ref = flash_ref(q, k, v)
+    for qc, kc in [(32, 128), (128, 32), (256, 256)]:
+        got = flash_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)

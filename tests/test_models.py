@@ -1,0 +1,175 @@
+"""Per-arch smoke tests (reduced configs, all 10 assigned architectures) +
+attention/MoE/decode consistency checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, reduced
+from repro.models import build_model, init_cache, init_model_params
+from repro.models.attention import blockwise_attention, reference_attention
+from repro.models.moe import moe_layer, moe_layer_dense_oracle
+from repro.models import layers as L
+
+B, S = 2, 64
+
+
+def _batch(cfg, with_labels=True):
+    rng = np.random.default_rng(0)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if with_labels:
+        b["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                  jnp.int32)
+    if cfg.is_encdec:
+        b["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_ctx, cfg.d_model)) * 0.02,
+            cfg.compute_dtype)
+    if cfg.vlm_patches:
+        b["patch_emb"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vlm_patches, cfg.d_model)) * 0.02,
+            cfg.compute_dtype)
+        b["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_smoke_train_step(arch):
+    """One forward/loss+grad step on CPU: correct shapes, finite values."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = init_model_params(model)
+    batch = _batch(cfg)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        model.loss, has_aux=True))(params, batch)
+    assert bool(jnp.isfinite(loss)), arch
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_prefill_then_decode_matches_forward(arch):
+    """Greedy next-token from (prefill + decode) must match the full
+    forward pass — the cache path is semantically equivalent."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = init_model_params(model)
+    batch = _batch(cfg, with_labels=False)
+
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+
+    cache = init_cache(model, B, S + 8)
+    last, cache = jax.jit(model.prefill)(params, batch, cache)
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0], np.float32),
+        np.asarray(logits_full[:, -1], np.float32), atol=2e-2, rtol=2e-2)
+
+    # decode the next token and compare against forward on the extended seq
+    nxt = jnp.argmax(last[:, 0], axis=-1).astype(jnp.int32)[:, None]
+    dbatch = {"tokens": nxt, "cache_len": jnp.asarray(S, jnp.int32)}
+    if cfg.vlm_patches:
+        dbatch["positions"] = jnp.full((B, 1, 3), S, jnp.int32)
+    dlogits, cache = jax.jit(model.decode)(params, dbatch, cache)
+    assert dlogits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(dlogits).all())
+
+    if cfg.is_encdec or cfg.vlm_patches:
+        return  # extended-forward comparison needs matching frontends
+    ext = {"tokens": jnp.concatenate([batch["tokens"], nxt], axis=1)}
+    logits_ext, _ = jax.jit(model.forward)(params, ext)
+    np.testing.assert_allclose(
+        np.asarray(dlogits[:, 0], np.float32),
+        np.asarray(logits_ext[:, -1], np.float32), atol=5e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("chunks", [(16, 16), (32, 64), (64, 37)])
+def test_blockwise_attention_vs_reference(causal, window, chunks, rng):
+    if window is not None and not causal:
+        pytest.skip("SWA is causal")
+    q = jnp.asarray(rng.normal(size=(2, 128, 8, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 128, 4, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 128, 4, 32)).astype(np.float32))
+    got = blockwise_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=chunks[0], kv_chunk=chunks[1])
+    want = reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_blockwise_cross_attention_uneven_kv(rng):
+    q = jnp.asarray(rng.normal(size=(1, 5, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1500 % 97, 4, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1500 % 97, 4, 16)).astype(np.float32))
+    got = blockwise_attention(q, k, v, causal=False, q_chunk=32, kv_chunk=32)
+    want = reference_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_moe_capacity_matches_dense_oracle_when_undropped(rng):
+    """With capacity >= group size the GShard dispatch must equal the
+    run-every-expert oracle exactly."""
+    cfg = dataclasses.replace(
+        reduced(get_config("deepseek-moe-16b")),
+        moe=dataclasses.replace(reduced(get_config("deepseek-moe-16b")).moe,
+                                capacity_factor=8.0, group_size=16))
+    from repro.models.moe import moe_schema
+    params = L.init_params(jax.random.PRNGKey(0), moe_schema(cfg),
+                           jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)).astype(np.float32))
+    got, aux = moe_layer(params, x, cfg)
+    want = moe_layer_dense_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+    assert float(aux) >= 0
+
+
+def test_padded_heads_equivalence(rng):
+    """tp_pad > 1 must not change the math (masked padded heads)."""
+    from repro.models.attention import head_mask, padded_heads
+    cfg = reduced(get_config("deepseek-coder-33b"))
+    cfg_p = dataclasses.replace(cfg, tp_pad=8)
+    Hp, Gp = padded_heads(cfg_p)
+    assert Hp % 8 == 0
+    mask = np.asarray(head_mask(cfg_p))
+    assert mask.sum() == cfg.num_heads
+    # end-to-end equivalence is covered by injecting weights (see DESIGN);
+    # here: padded model still runs and is finite
+    m = build_model(cfg_p)
+    p = init_model_params(m)
+    logits, _ = jax.jit(m.forward)(p, _batch(cfg_p))
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_swa_ring_cache_matches_full_forward(rng):
+    """Sliding-window ring cache (window-sized slots) must reproduce the
+    full-forward logits during decode past the window boundary."""
+    import jax
+    cfg = reduced(get_config("h2o-danube-3-4b"))     # window 48 reduced
+    model = build_model(cfg)
+    params = init_model_params(model)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    cache = init_cache(model, B, 96)                 # 96 > window => ring
+    slots = jax.tree.leaves(cache)[0].shape[2]
+    assert slots == cfg.sliding_window               # ring allocated
+    last, cache = jax.jit(model.prefill)(params, {"tokens": toks}, cache)
+    seq = toks
+    dec = jax.jit(model.decode)
+    for t in range(4):                               # crosses S=64 -> 68
+        nxt = jnp.argmax(last[:, 0], -1).astype(jnp.int32)[:, None]
+        last, cache = dec(params, {"tokens": nxt,
+                                   "cache_len": jnp.asarray(S + t, jnp.int32)},
+                          cache)
+        seq = jnp.concatenate([seq, nxt], axis=1)
+    lf, _ = jax.jit(model.forward)(params, {"tokens": seq})
+    np.testing.assert_allclose(np.asarray(last[:, 0], np.float32),
+                               np.asarray(lf[:, -1], np.float32),
+                               atol=5e-2, rtol=5e-2)
