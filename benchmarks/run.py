@@ -3,10 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV (us_per_call: simulated kernels run
 at the paper's 80 MHz clock; Pallas kernels report interpret-mode wall time
 on CPU — the structural stand-in for the TPU target).
+
+``--json PATH`` additionally writes the rows as a BENCH_*.json artifact
+(the perf-trajectory record CI uploads per commit); ``--only`` selects a
+comma-separated subset of table modules for the CI smoke run.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import time
 import traceback
 
 
@@ -14,18 +21,48 @@ def main() -> None:
     from benchmarks import (kernel_bench, table2_fft, table3_power,
                             table4_fir, table5_app)
 
+    mods = {m.__name__.split(".")[-1]: m
+            for m in (table2_fft, table3_power, table4_fir, table5_app,
+                      kernel_bench)}
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset, e.g. "
+                         "table2_fft,table4_fir (default: all)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to a BENCH_*.json artifact")
+    args = ap.parse_args()
+
+    selected = list(mods)
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in selected if s not in mods]
+        if unknown:
+            raise SystemExit(f"unknown bench module(s) {unknown}; "
+                             f"choose from {sorted(mods)}")
+
     print("name,us_per_call,derived")
-    failed = 0
-    for mod in (table2_fft, table3_power, table4_fir, table5_app,
-                kernel_bench):
+    rows, failed = [], 0
+    for name in selected:
+        t0 = time.perf_counter()
         try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}")
+            for row in mods[name].run():
+                rname, us, derived = row
+                print(f"{rname},{us:.1f},{derived}")
+                rows.append({"name": rname, "us_per_call": us,
+                             "derived": derived, "module": name})
         except Exception as e:  # pragma: no cover
             failed += 1
-            print(f"{mod.__name__},nan,ERROR:{type(e).__name__}:{e}",
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}",
                   file=sys.stderr)
             traceback.print_exc()
+        rows.append({"name": f"{name}/_wall_s", "module": name,
+                     "us_per_call": (time.perf_counter() - t0) * 1e6,
+                     "derived": "harness wall time"})
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "failed": failed,
+                       "modules": selected}, f, indent=1)
     if failed:
         raise SystemExit(1)
 

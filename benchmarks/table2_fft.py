@@ -4,8 +4,15 @@ Reproduces the VWR2A column of Table 2 from the cycle-accurate simulator;
 CPU and FFT-accelerator columns are the paper's measurements (they are
 physical-SoC numbers we cannot re-measure). Derived: sim/paper cycle ratio
 and the speed-up over the paper's CPU baseline.
+
+Beyond the paper: a column-scaling sweep (the paper's machine is the
+2-column instance; Ara/STRELA-style parameterization lets us sweep
+n_columns) and the vectorized-vs-scalar simulator engine speedup — the
+perf-trajectory numbers CI tracks via the BENCH_*.json artifact.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -41,4 +48,40 @@ def run():
                          f"ratio={cycles / vwr2a:.2f};"
                          f"speedup_vs_cpu={cpu / cycles:.1f}x;"
                          f"q15_rel_err={rel:.1e}"))
+    rows += _column_sweep(rng)
+    rows += _engine_speedup(rng)
     return rows
+
+
+def _column_sweep(rng, n: int = 512):
+    """Wall-cycle scaling of the 512-pt complex FFT over machine width."""
+    from repro.archsim.programs.fft import run_fft
+
+    rows, base = [], None
+    x = (rng.normal(size=n) + 1j * rng.normal(size=n)) * 0.3
+    ref = np.fft.fft(x)
+    for nc in (1, 2, 4):
+        X, _, cycles = run_fft(n, x, n_columns=nc)
+        rel = float(np.abs(X - ref).max() / np.abs(ref).max())
+        base = base or cycles
+        rows.append((f"table2/cfft_{n}_ncols{nc}", cycles / F_HZ * 1e6,
+                     f"sim_cycles={cycles};scaling={base / cycles:.2f}x;"
+                     f"q15_rel_err={rel:.1e}"))
+    return rows
+
+
+def _engine_speedup(rng, n: int = 512):
+    """Vectorized vs scalar interpreter wall time (identical results)."""
+    from repro.archsim.machine import VWR2A
+    from repro.archsim.programs.fft import run_fft
+
+    x = (rng.normal(size=n) + 1j * rng.normal(size=n)) * 0.3
+    times = {}
+    for engine in ("scalar", "vector"):
+        run_fft(n, x, machine=VWR2A(engine=engine))       # warm caches
+        t0 = time.perf_counter()
+        run_fft(n, x, machine=VWR2A(engine=engine))
+        times[engine] = (time.perf_counter() - t0) * 1e6
+    return [(f"archsim/engine_vector_cfft_{n}", times["vector"],
+             f"scalar_us={times['scalar']:.0f};"
+             f"speedup={times['scalar'] / times['vector']:.1f}x")]

@@ -1,0 +1,1 @@
+"""Compatibility shims for optional third-party dependencies."""

@@ -1,0 +1,111 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The test suite uses a small, well-behaved subset of hypothesis:
+``@settings(max_examples=N, deadline=None)`` over ``@given(st.integers(...),
+st.floats(...))`` with no pytest fixtures mixed in.  Hermetic containers
+(no network, no pip) still need those modules to *collect and run*, so
+``tests/conftest.py`` installs this stub into ``sys.modules`` only when the
+real package is unavailable.  When hypothesis is installed (e.g. in CI via
+``pip install -e ".[test]"``) the stub is never imported.
+
+Semantics: each example draws one value per strategy.  Example 0 pins every
+strategy to its minimum and example 1 to its maximum (edge coverage);
+remaining examples are drawn from a NumPy Generator seeded from the test's
+qualified name, so failures reproduce run-to-run and machine-to-machine.
+No shrinking, no database — this is a fallback, not a replacement.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw, lo=None, hi=None):
+        self._draw = draw
+        self._lo = lo
+        self._hi = hi
+
+    def example_at(self, i: int, rng: np.random.Generator):
+        if i == 0 and self._lo is not None:
+            return self._lo
+        if i == 1 and self._hi is not None:
+            return self._hi
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)),
+                     min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda r: float(r.uniform(min_value, max_value)),
+                     float(min_value), float(max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.integers(0, 2)), False, True)
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda r: seq[int(r.integers(0, len(seq)))],
+                     seq[0], seq[-1])
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng([seed, i])
+                args = [s.example_at(i, rng) for s in strategies]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} falsified on example {i}: "
+                        f"args={args!r}") from e
+
+        # NOTE: deliberately no functools.wraps — __wrapped__ would make
+        # pytest see the original signature and demand fixtures for the
+        # drawn arguments.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_stub = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def install():
+    """Register this stub as `hypothesis` / `hypothesis.strategies`."""
+    if "hypothesis" in sys.modules:          # real package won the race
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.__stub__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

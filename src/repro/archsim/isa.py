@@ -13,7 +13,11 @@ import dataclasses
 from typing import Optional, Tuple
 
 # ---- operand sources / destinations for RC ops -----------------------------
-# ("vwr", name)        word k of VWR slice for this RC (MXCU-controlled k)
+# ("vwr", name[, off]) word (rc*32 + k + off) of the VWR (MXCU-controlled k;
+#                      non-zero off models the paper's mux-network offset
+#                      indexing via SRF masking values, §3.2)
+# ("win", off)         virtual 256-word [B;A] window at 128 + rc*32 + k + off
+#                      (boundary words for FIR/conv, §3.3.1)
 # ("srf", i)           scalar register file entry i
 # ("reg", 0|1)         RC-local register
 # ("imm", value)       immediate
@@ -69,3 +73,42 @@ class SlotWord:
 
 
 NOP_WORD = SlotWord()
+NOP_RC = RCInstr()
+
+
+# ---- k-sweep macro ---------------------------------------------------------
+# Generated kernel programs are dominated by "k-sweeps": the same per-RC
+# instruction sequence replayed at a series of MXCU word indices k (a SETK
+# configuration word followed by mxcu-NOP body words).  sweep_words() is the
+# one builder all program generators share.  It memoizes the SlotWords per
+# (instruction sequence, k, lane mask): the body words of a sweep do not
+# depend on k at all, so every k (and every later pass/block reusing the
+# pattern) gets the *same* word objects back.  That identity-sharing is what
+# lets the vectorized engine (vector.py) recognize and cache repeated
+# packets instead of re-analyzing tens of thousands of fresh dataclasses.
+
+_SWEEP_CACHE: dict = {}
+_ALL_LANES = (True, True, True, True)
+
+
+def sweep_words(k: int, instrs, active=_ALL_LANES) -> list:
+    """One sweep instance: SETK k, then `instrs` issued per cycle on the
+    lanes enabled in `active` (inactive RCs issue NOPs; their cycles are
+    still charged).  `instrs` must be a hashable tuple of RCInstr."""
+    instrs = tuple(instrs)
+    active = tuple(active)
+    key = (instrs, active)
+    body = _SWEEP_CACHE.get(key)
+    if body is None:
+        rcs_rows = [tuple(ins if active[r] else NOP_RC for r in range(4))
+                    for ins in instrs]
+        body = [SlotWord(rcs=rcs) for rcs in rcs_rows[1:]]
+        _SWEEP_CACHE[key] = body
+        _SWEEP_CACHE[key + ("heads",)] = {}
+    heads = _SWEEP_CACHE[key + ("heads",)]
+    head = heads.get(k)
+    if head is None:
+        rcs0 = tuple(instrs[0] if active[r] else NOP_RC for r in range(4))
+        head = SlotWord(mxcu=MXCUInstr("SETK", k), rcs=rcs0)
+        heads[k] = head
+    return [head] + body

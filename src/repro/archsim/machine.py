@@ -38,6 +38,20 @@ def to_q15(x: float) -> int:
     return int(np.clip(round(x * (1 << Q15)), -(1 << 31), (1 << 31) - 1))
 
 
+def to_q15_arr(x) -> np.ndarray:
+    """Vectorized to_q15: bit-identical (incl. round-half-to-even)."""
+    q = np.round(np.asarray(x, np.float64) * (1 << Q15))
+    return np.clip(q, -(1 << 31), (1 << 31) - 1).astype(np.int64)
+
+
+def split_work(total: int, n_parts: int) -> list:
+    """Deal `total` units over `n_parts` columns, remainder to the first
+    columns — per-column host-side cycle charges must conserve the total
+    for ANY column count (the energy model integrates activity)."""
+    base, rem = divmod(total, n_parts)
+    return [base + (i < rem) for i in range(n_parts)]
+
+
 def from_q15(x) -> float:
     return float(np.int64(x)) / (1 << Q15)
 
@@ -244,12 +258,28 @@ class Column:
 
 
 class VWR2A:
-    """Two columns + shared SPM/SRF + DMA counter (paper Fig. 1)."""
+    """N columns + shared SPM/SRF + DMA counter.  The paper's Fig. 1
+    instance is ``n_columns=2`` (the default); the machine is
+    parameterized the way Ara scales vector lanes / STRELA scales CGRA
+    columns, so kernel mappings can sweep column counts.
 
-    def __init__(self):
+    ``engine`` selects the interpreter: ``"vector"`` (default) runs
+    straight-line k-sweep programs as NumPy array ops over all 4 RCs x
+    sweep instances at once (bit-exact counters and numerics, see
+    vector.py); ``"scalar"`` forces the word-at-a-time reference path.
+    """
+
+    def __init__(self, n_columns: int = 2, engine: str = "vector"):
+        assert n_columns >= 1
+        assert engine in ("vector", "scalar"), engine
         self.spm = np.zeros((SPM_LINES, VWR_WORDS), np.int64)
         self.srf = np.zeros(8, np.int64)
-        self.cols = [Column(self.spm, self.srf) for _ in range(2)]
+        self.cols = [Column(self.spm, self.srf) for _ in range(n_columns)]
+        self.engine = engine
+
+    @property
+    def n_columns(self) -> int:
+        return len(self.cols)
 
     def dma_in(self, line: int, words: np.ndarray):
         """System memory -> SPM (word-granular DMA, counted per word)."""
@@ -261,8 +291,34 @@ class VWR2A:
         self.cols[0].counters.dma_words += n
         return self.spm.reshape(-1)[line * VWR_WORDS: line * VWR_WORDS + n].copy()
 
-    def run(self, programs, max_cycles: int = 1_000_000):
-        """programs: list of per-column instruction lists (SlotWords)."""
+    def run(self, programs, max_cycles: int = 1_000_000,
+            engine: str | None = None):
+        """programs: list of per-column instruction lists (SlotWords).
+        Shorter lists are padded with empty programs."""
+        programs = list(programs)
+        assert len(programs) <= len(self.cols), "more programs than columns"
+        programs += [[] for _ in range(len(self.cols) - len(programs))]
+
+        engine = engine or self.engine
+        active = [(c, p) for c, p in zip(self.cols, programs) if p]
+        # The vectorized path reorders execution within one column; with
+        # two or more concurrently-active columns the scalar lockstep
+        # interleaving over shared SPM/SRF must be preserved exactly, so
+        # only single-active-column runs (the shape every generated
+        # kernel pass uses) take the fast path.
+        if engine == "vector" and len(active) == 1:
+            from repro.archsim import vector
+
+            col, prog = active[0]
+            if len(prog) <= max_cycles:
+                items = vector.compile_program(prog)
+                if items is not None:
+                    for c, p in zip(self.cols, programs):
+                        c.pc = 0
+                        c.halted = not p
+                    vector.run_compiled(col, prog, items)
+                    return self.counters()
+
         for col, prog in zip(self.cols, programs):
             col.pc = 0
             col.halted = not prog

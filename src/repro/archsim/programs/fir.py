@@ -1,55 +1,64 @@
 """11-tap FIR mapped onto the VWR2A simulator (paper §4.4.1).
 
-Both columns work on different slices of the input (paper's mapping). Each
-128-word block pass stages the current block in VWR A and the previous block
-in VWR B; the (k-1)-word boundary reads use the virtual [B;A] window (the
-circular-shift boundary delivery of §3.3.1). Taps are q16.15 immediates in
-the configuration words. 21 RC-cycles per output word (1 FXMUL + 10
+The input blocks are independent, so they are dealt round-robin to however
+many columns the machine has (paper mapping: both columns on different
+slices of the input; ``n_columns`` generalizes it).  Each 128-word block
+pass stages the current block in VWR A and the previous block in VWR B;
+the (k-1)-word boundary reads use the virtual [B;A] window (the
+circular-shift boundary delivery of §3.3.1).  Taps are q16.15 immediates
+in the configuration words.  21 RC-cycles per output word (1 FXMUL + 10
 FXMUL/ADD pairs), MXCU INCK and LCU looping ride in parallel slots.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
-from repro.archsim.isa import LSUInstr, MXCUInstr, RCInstr, SlotWord
-from repro.archsim.machine import RC_SLICE, VWR_WORDS, VWR2A, to_q15
+from repro.archsim.isa import LSUInstr, RCInstr, SlotWord, sweep_words
+from repro.archsim.machine import RC_SLICE, VWR_WORDS, VWR2A, to_q15_arr
+
+
+@functools.lru_cache(maxsize=64)
+def _mac_instrs(taps_q15: tuple):
+    """The per-output 21-cycle MAC sequence (k-independent)."""
+    k_taps = len(taps_q15)
+    seq = [RCInstr("FXMUL", ("win", 0), ("imm", taps_q15[0]), ("reg", 0))]
+    for i in range(1, k_taps):
+        seq.append(RCInstr("FXMUL", ("win", -i), ("imm", taps_q15[i]), None))
+        dest = ("vwr", "C", 0) if i == k_taps - 1 else ("reg", 0)
+        seq.append(RCInstr("ADD", ("reg", 0), ("rc", 0), dest))
+    return tuple(seq)
 
 
 def gen_fir_block(x_line: int, prev_line: int, out_line: int,
-                  taps_q15: list[int]):
+                  taps_q15: tuple):
     """One 128-output FIR pass: LOAD A/B, 32 x 21-cycle MACs, STORE C."""
-    k_taps = len(taps_q15)
+    instrs = _mac_instrs(tuple(taps_q15))
     words = [
         SlotWord(lsu=LSUInstr("LOAD", "A", ("imm", x_line))),
         SlotWord(lsu=LSUInstr("LOAD", "B", ("imm", prev_line))),
     ]
     for k in range(RC_SLICE):
-        seq = [RCInstr("FXMUL", ("win", 0), ("imm", taps_q15[0]), ("reg", 0))]
-        for i in range(1, k_taps):
-            seq.append(RCInstr("FXMUL", ("win", -i), ("imm", taps_q15[i]),
-                               None))
-            dest = ("vwr", "C", 0) if i == k_taps - 1 else ("reg", 0)
-            seq.append(RCInstr("ADD", ("reg", 0), ("rc", 0), dest))
-        for step, ins in enumerate(seq):
-            words.append(SlotWord(
-                mxcu=MXCUInstr("SETK", k) if step == 0 else MXCUInstr(),
-                rcs=(ins, ins, ins, ins)))
+        words += sweep_words(k, instrs)
     words.append(SlotWord(lsu=LSUInstr("STORE", "C", ("imm", out_line))))
     return words
 
 
 def run_fir(x: np.ndarray, taps: np.ndarray, *,
-            machine: VWR2A | None = None, charge_dma: bool = True):
+            machine: VWR2A | None = None, charge_dma: bool = True,
+            n_columns: int | None = None):
     """Simulate the FIR over a real-valued signal (len multiple of 128).
     Returns (y, counters, wall_cycles)."""
-    m = machine or VWR2A()
+    m = machine or VWR2A(n_columns or 2)
+    nc = m.n_columns
     n = x.shape[0]
     assert n % VWR_WORDS == 0
     n_lines = n // VWR_WORDS
     out_base = 24                          # output region in the SPM
     assert out_base + n_lines <= 48
 
-    xq = np.array([to_q15(v) for v in x], np.int64)
+    xq = to_q15_arr(x)
     if charge_dma:
         for ln in range(n_lines):
             m.dma_in(ln, xq[ln * VWR_WORDS: (ln + 1) * VWR_WORDS])
@@ -59,12 +68,12 @@ def run_fir(x: np.ndarray, taps: np.ndarray, *,
     ZERO_LINE = 63
     m.spm[ZERO_LINE] = 0
 
-    tq = [to_q15(v) for v in np.asarray(taps, np.float64)]
-    for ln in range(n_lines):              # columns alternate blocks
+    tq = tuple(int(v) for v in to_q15_arr(np.asarray(taps, np.float64)))
+    for ln in range(n_lines):              # columns take alternating blocks
         prev = ZERO_LINE if ln == 0 else ln - 1
         prog = gen_fir_block(ln, prev, out_base + ln, tq)
-        progs = [[], []]
-        progs[ln % 2] = prog
+        progs = [[] for _ in range(nc)]
+        progs[ln % nc] = prog
         m.run(progs)
 
     yq = m.spm[out_base: out_base + n_lines].reshape(-1).copy()

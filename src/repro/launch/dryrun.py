@@ -138,6 +138,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
             rec["lower_s"] = round(t1 - t0, 1)
 
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):   # newer jax: one dict per
+                ca = ca[0] if ca else {}        # program; take the entry
             rec["flops"] = float(ca.get("flops", -1))
             rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
             rec["transcendentals"] = float(ca.get("transcendentals", -1))

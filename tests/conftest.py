@@ -4,6 +4,15 @@ import pytest
 # NOTE: no XLA_FLAGS here on purpose — tests and benches must see the real
 # (single-CPU) device set; only launch/dryrun.py forces 512 host devices.
 
+# Hermetic containers have no `hypothesis`; fall back to the deterministic
+# stub so all property-test modules collect and run (see _compat docstring).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro._compat import hypothesis_stub
+
+    hypothesis_stub.install()
+
 
 @pytest.fixture(scope="session")
 def rng():

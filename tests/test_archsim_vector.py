@@ -1,0 +1,181 @@
+"""Vectorized-engine regression: the NumPy k-sweep interpreter must match
+the seed scalar interpreter BIT-EXACTLY (numerics, memory state, and every
+activity counter) on all generated kernel programs, and the parameterized
+machine must scale wall cycles down monotonically with column count."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.archsim.isa import LCUInstr, LSUInstr, MXCUInstr, RCInstr, SlotWord
+from repro.archsim.machine import RC_SLICE, VWR2A
+from repro.archsim.programs.app import run_delineate
+from repro.archsim.programs.fft import run_fft, run_rfft
+from repro.archsim.programs.fir import run_fir
+from repro.core.fir import fir_reference, lowpass_taps
+
+
+def assert_machines_identical(ma: VWR2A, mb: VWR2A):
+    np.testing.assert_array_equal(ma.spm, mb.spm)
+    np.testing.assert_array_equal(ma.srf, mb.srf)
+    for ca, cb in zip(ma.cols, mb.cols):
+        assert dataclasses.asdict(ca.counters) == dataclasses.asdict(
+            cb.counters)
+        for n in "ABC":
+            np.testing.assert_array_equal(ca.vwr[n], cb.vwr[n])
+        np.testing.assert_array_equal(ca.rc_regs, cb.rc_regs)
+        np.testing.assert_array_equal(ca.rc_last, cb.rc_last)
+        assert ca.k == cb.k
+
+
+def both_engines():
+    return VWR2A(engine="scalar"), VWR2A(engine="vector")
+
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_fft_engine_equivalence(n, rng):
+    x = (rng.normal(size=n) + 1j * rng.normal(size=n)) * 0.3
+    ms, mv = both_engines()
+    Xs, cs, cys = run_fft(n, x, machine=ms)
+    Xv, cv, cyv = run_fft(n, x, machine=mv)
+    np.testing.assert_array_equal(Xs, Xv)
+    assert cs == cv and cys == cyv
+    assert_machines_identical(ms, mv)
+
+
+def test_rfft_engine_equivalence(rng):
+    x = rng.normal(size=512) * 0.3
+    ms, mv = both_engines()
+    Xs, cs, cys = run_rfft(512, x, machine=ms)
+    Xv, cv, cyv = run_rfft(512, x, machine=mv)
+    np.testing.assert_array_equal(Xs, Xv)
+    assert cs == cv and cys == cyv
+    assert_machines_identical(ms, mv)
+
+
+def test_fir_engine_equivalence(rng):
+    x = np.sin(np.arange(512) * 0.1) * 0.5
+    taps = lowpass_taps(11)
+    ms, mv = both_engines()
+    ys, cs, cys = run_fir(x, taps, machine=ms)
+    yv, cv, cyv = run_fir(x, taps, machine=mv)
+    np.testing.assert_array_equal(ys, yv)
+    assert cs == cv and cys == cyv
+    assert_machines_identical(ms, mv)
+
+
+def test_delineate_engine_equivalence(rng):
+    x = rng.normal(size=256) * 0.2
+    ms, mv = both_engines()
+    mx_s, mn_s, cs, cys = run_delineate(x, machine=ms)
+    mx_v, mn_v, cv, cyv = run_delineate(x, machine=mv)
+    np.testing.assert_array_equal(mx_s, mx_v)
+    np.testing.assert_array_equal(mn_s, mn_v)
+    assert cs == cv and cys == cyv
+    assert_machines_identical(ms, mv)
+
+
+def test_raw_sweep_program_equivalence():
+    """Hand-built k-sweep (the shape compile_program vectorizes) matches."""
+    progs = []
+    for m in both_engines():
+        a = np.arange(128, dtype=np.int64) - 64
+        b = np.arange(128, dtype=np.int64) * 3
+        m.spm[0], m.spm[1] = a, b
+        prog = [SlotWord(lsu=LSUInstr("LOAD", "A", ("imm", 0))),
+                SlotWord(lsu=LSUInstr("LOAD", "B", ("imm", 1)))]
+        ins0 = RCInstr("SUB", ("vwr", "A"), ("vwr", "B"), ("reg", 0))
+        ins1 = RCInstr("MUL", ("reg", 0), ("rc", 0), ("vwr", "C"))
+        for k in range(RC_SLICE):
+            prog.append(SlotWord(mxcu=MXCUInstr("SETK", k),
+                                 rcs=(ins0, ins0, ins0, ins0)))
+            prog.append(SlotWord(rcs=(ins1, ins1, ins1, ins1)))
+        prog.append(SlotWord(lsu=LSUInstr("STORE", "C", ("imm", 2))))
+        m.run([prog])
+        progs.append(m)
+    ms, mv = progs
+    assert_machines_identical(ms, mv)
+    np.testing.assert_array_equal(
+        ms.spm[2], (np.arange(128) - 64 - np.arange(128) * 3) ** 2)
+
+
+def test_branchy_program_falls_back_to_scalar():
+    """LCU control flow must run on the scalar path with identical state."""
+    results = []
+    for m in both_engines():
+        body = SlotWord(lcu=LCUInstr("ADDI", reg=0, val=1),
+                        rcs=(RCInstr("ADD", ("reg", 0), ("imm", 3),
+                                     ("reg", 0)),
+                             RCInstr(), RCInstr(), RCInstr()))
+        prog = [SlotWord(lcu=LCUInstr("SETI", reg=0, val=0)),
+                body,
+                SlotWord(lcu=LCUInstr("BLT", reg=0, val=7, target=1)),
+                SlotWord(lcu=LCUInstr("EXIT"))]
+        m.run([prog])
+        results.append(m)
+    assert_machines_identical(*results)
+    assert int(results[0].cols[0].rc_regs[0, 0]) == 21
+
+
+@pytest.mark.parametrize("n_columns", [1, 2, 4])
+def test_fft_multicolumn_numerics(n_columns, rng):
+    x = (rng.normal(size=256) + 1j * rng.normal(size=256)) * 0.3
+    X, _, cycles = run_fft(256, x, n_columns=n_columns)
+    ref = np.fft.fft(x)
+    assert np.abs(X - ref).max() / np.abs(ref).max() < 0.01
+    assert cycles > 0
+
+
+def test_fft_multicolumn_cycle_scaling(rng):
+    x = (rng.normal(size=256) + 1j * rng.normal(size=256)) * 0.3
+    cycles = [run_fft(256, x, n_columns=nc)[2] for nc in (1, 2, 4)]
+    assert cycles[0] > cycles[1] > cycles[2]
+    # total activity (energy proxy) is conserved, only spread over columns
+    ops = [run_fft(256, x, n_columns=nc)[1].rc_ops for nc in (1, 2, 4)]
+    assert ops[0] == ops[1] == ops[2]
+
+
+@pytest.mark.parametrize("n_columns", [1, 2, 4])
+def test_fir_multicolumn_numerics(n_columns, rng):
+    taps = lowpass_taps(11)
+    x = np.sin(np.arange(512) * 0.1) * 0.5
+    y, counters, cycles = run_fir(x, taps, n_columns=n_columns)
+    ref = fir_reference(x[None, :], taps)[0]
+    assert np.abs(y - ref).max() < 1e-3
+    assert counters.dma_words == 1024
+
+
+def test_unprovable_dest_falls_back_to_scalar():
+    """A sweep with an RC dest outside the proven subset (("win", ...))
+    must run on the scalar path, not crash the vector engine."""
+    results = []
+    for m in both_engines():
+        m.spm[0] = np.arange(128)
+        prog = [SlotWord(lsu=LSUInstr("LOAD", "A", ("imm", 0)))]
+        ins = RCInstr("ADD", ("vwr", "A"), ("imm", 1), ("win", 0))
+        for k in range(RC_SLICE):
+            prog.append(SlotWord(mxcu=MXCUInstr("SETK", k),
+                                 rcs=(ins, ins, ins, ins)))
+        m.run([prog])
+        results.append(m)
+    assert_machines_identical(*results)
+
+
+@pytest.mark.parametrize("n_columns", [1, 2, 3, 4, 5])
+def test_rfft_activity_conserved_any_width(n_columns, rng):
+    """Host-side cycle charges must conserve total activity for ANY
+    column count — the energy model integrates these counters."""
+    x = rng.normal(size=512) * 0.3
+    _, ref, _ = run_rfft(512, x, n_columns=2)
+    _, c, _ = run_rfft(512, x, n_columns=n_columns)
+    for f in ("rc_ops", "rc_mults", "vwr_reads", "vwr_writes",
+              "spm_line_reads", "spm_line_writes"):
+        assert getattr(c, f) == getattr(ref, f), f
+
+
+def test_fir_multicolumn_cycle_scaling():
+    taps = lowpass_taps(11)
+    x = np.sin(np.arange(512) * 0.1) * 0.5
+    cycles = [run_fir(x, taps, n_columns=nc)[2] for nc in (1, 2, 4)]
+    assert cycles[0] > cycles[1] > cycles[2]
+    assert cycles[0] >= 2 * cycles[1]          # blocks split evenly

@@ -3,6 +3,7 @@ end-to-end accuracy on synthetic respiration."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.biosignal import (delineate, extract_features, make_app,
@@ -40,6 +41,7 @@ def test_features_finite_and_fixed_width():
     assert bool(jnp.isfinite(f).all())
 
 
+@pytest.mark.slow
 def test_svm_learns_rate_classes():
     sig, labels = synthetic_respiration(96, 2048, seed=5)
     filtered = fir_direct(sig, jnp.asarray(lowpass_taps(11)))

@@ -113,6 +113,7 @@ def test_checkpoint_async_and_reshard():
 
 # ---------------- compression ----------------
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 400))
 def test_int8_quant_error_bound(seed, n):

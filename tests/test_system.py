@@ -42,6 +42,7 @@ def tiny_setup():
         yield cfg, model, mesh, dc, oc, bundle
 
 
+@pytest.mark.slow
 def test_train_loss_decreases_and_resumes(tiny_setup):
     cfg, model, mesh, dc, oc, bundle = tiny_setup
     d = tempfile.mkdtemp()
@@ -88,6 +89,7 @@ def test_engine_continuous_batching(tiny_setup):
     assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)
 
 
+@pytest.mark.slow
 def test_engine_matches_batch_decode(tiny_setup):
     """Engine greedy decode == argmax over model.forward continuation."""
     cfg, model, mesh, dc, oc, bundle = tiny_setup
