@@ -11,8 +11,7 @@ import numpy as np
 
 
 def _time(fn, *args, reps: int = 5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))     # one warmup/compile call
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
@@ -64,6 +63,19 @@ def run():
                                          kv_chunk=128))
     us_r = _time(lambda: flash_ref(qf, kf, vf))
     rows.append(("kernel/flash_attn_B2_S512", us_k, f"oracle_us={us_r:.0f}"))
+
+    from benchmarks.table5_app import _paired_best
+    from repro.core.biosignal import make_app, synthetic_respiration
+    from repro.kernels.pipeline.ops import app_pipeline
+    from repro.kernels.pipeline.ref import staged_kernel_fns
+    app = make_app()
+    sig, _ = synthetic_respiration(32, 2048, seed=0)
+    staged = staged_kernel_fns(app.fir_taps, app.svm_w, app.svm_b,
+                               fft_size=app.fft_size)
+    us_k, us_r = _paired_best([lambda: app_pipeline(app, sig),
+                               lambda: staged(sig)], reps=5)
+    rows.append(("kernel/pipeline_fused_32x2048", us_k,
+                 f"staged_us={us_r:.0f};speedup={us_r / us_k:.2f}x"))
 
     from repro.models.attention import blockwise_attention, reference_attention
     q = jnp.asarray(rng.normal(size=(2, 512, 8, 64)).astype(np.float32))

@@ -30,6 +30,10 @@ def main() -> None:
                          "table2_fft,table4_fir (default: all)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to a BENCH_*.json artifact")
+    ap.add_argument("--check-fused", action="store_true",
+                    help="fail if any */pipeline_fused row is slower than "
+                         "its */pipeline_staged sibling (interpret-mode "
+                         "regression gate for the fused application kernel)")
     args = ap.parse_args()
 
     selected = list(mods)
@@ -63,6 +67,20 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "failed": failed,
                        "modules": selected}, f, indent=1)
+    if args.check_fused:
+        by_name = {r["name"]: r["us_per_call"] for r in rows}
+        pairs = [(n, n.rsplit("pipeline_fused", 1)[0] + "pipeline_staged")
+                 for n in by_name if n.endswith("pipeline_fused")]
+        if not pairs:
+            print("check-fused: no pipeline_fused rows found", file=sys.stderr)
+            raise SystemExit(1)
+        for fused, staged in pairs:
+            uf, us = by_name[fused], by_name.get(staged)
+            if us is None or uf > us:
+                print(f"check-fused FAILED: {fused}={uf:.1f}us vs "
+                      f"{staged}={us}us", file=sys.stderr)
+                raise SystemExit(1)
+            print(f"check-fused ok: {fused} {uf:.1f}us <= {staged} {us:.1f}us")
     if failed:
         raise SystemExit(1)
 

@@ -1,0 +1,83 @@
+"""Measured block-size autotuning for the Pallas kernels.
+
+`VWRSpec.max_block_bytes` picks the row-block `rb` with a static formula
+(largest block whose n_vwrs live copies fit the VMEM budget). That is the
+paper's *design-time* reasoning about the 4096-bit VWR width; at *run* time
+the right refill width depends on the actual kernel and shape. This module
+replaces the formula with measurement: time a handful of candidate `rb`
+values on the real arrays, keep the fastest, and cache the winner per
+(kernel, shape) key so the search cost is paid once per process.
+
+Shared by the fft / fir / fused-pipeline kernels (their `ops` wrappers grow
+an ``autotune=True`` knob) and the streaming window runtime.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.core.vwr import SUBLANES
+
+# (kernel-name, shape...) -> winning block_rows
+_CACHE: dict[tuple, int] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def cache_snapshot() -> dict:
+    return dict(_CACHE)
+
+
+def candidate_block_rows(rows: int, *, max_candidates: int = 4) -> list[int]:
+    """Candidate row-blocks for an R-row operand: divisors of R (so the grid
+    tiles exactly), preferring sublane multiples, largest first. The
+    whole-batch block (rows itself) is always the first candidate — it is
+    the largest divisor, sublane-aligned whenever any divisor is."""
+    divs = [d for d in range(1, rows + 1) if rows % d == 0]
+    aligned = [d for d in divs if d % SUBLANES == 0]
+    pool = sorted(aligned or divs, reverse=True)
+    return pool[:max_candidates]
+
+
+def _measure(fn: Callable[[], object], reps: int) -> float:
+    jax.block_until_ready(fn())                 # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_block_rows(key: tuple, candidates: list[int],
+                        build: Callable[[int], Callable[[], object]],
+                        *, reps: int = 3) -> int:
+    """Pick the fastest `block_rows` among `candidates`.
+
+    ``build(rb)`` returns a zero-arg callable running the kernel with that
+    block size; each candidate is compiled once and timed best-of-`reps`.
+    The winner is cached under ``key`` for the life of the process.
+    """
+    if key in _CACHE:
+        return _CACHE[key]
+    if len(candidates) == 1:
+        _CACHE[key] = candidates[0]
+        return candidates[0]
+    timed = [(_measure(build(rb), reps), rb) for rb in candidates]
+    best = min(timed)[1]
+    _CACHE[key] = best
+    return best
+
+
+def tuned_block_rows(name: str, rows: int, extras: tuple,
+                     run: Callable[[int], object]) -> int:
+    """One-call wiring for the kernel `ops` wrappers: build the per-shape
+    cache key, enumerate candidates, measure, cache. ``run(rb)`` executes
+    the kernel with that block size."""
+    key = (name, rows) + tuple(extras)
+    return autotune_block_rows(key, candidate_block_rows(rows),
+                               lambda rb: lambda: run(rb))

@@ -73,22 +73,35 @@ def _masked_intervals(mask):
 # Features + SVM
 # ---------------------------------------------------------------------------
 
-def extract_features(filtered, fft_size: int = 512):
-    """(B, S) filtered window -> (B, F) feature matrix (F = 12)."""
-    is_max, is_min = delineate(filtered)
+def interval_time_features(is_max, is_min) -> list:
+    """The 6 time features: mean/median/RMS of the inspiration and
+    expiration interval lengths (single source — also run inside the fused
+    pipeline kernel)."""
     f_time = []
     for mask in (is_max, is_min):
         mean, med, rms = _masked_intervals(mask)
         f_time += [mean, med, rms]
+    return f_time
+
+
+def band_power_features(power, fft_size: int) -> list:
+    """The 6 log-band powers over a (B, fft/2+1) power spectrum (single
+    source — also run inside the fused pipeline kernel)."""
+    nb = fft_size // 2 + 1
+    bands = np.linspace(1, nb, 7, dtype=int)         # 6 log-ish bands
+    return [jnp.log1p(jnp.sum(power[..., a:b], axis=-1))
+            for a, b in zip(bands[:-1], bands[1:])]
+
+
+def extract_features(filtered, fft_size: int = 512):
+    """(B, S) filtered window -> (B, F) feature matrix (F = 12)."""
+    is_max, is_min = delineate(filtered)
+    f_time = interval_time_features(is_max, is_min)
     seg = filtered[..., :fft_size]
     seg = seg - jnp.mean(seg, axis=-1, keepdims=True)
     Xr, Xi = rfft_packed(seg)
     power = jnp.square(Xr) + jnp.square(Xi)          # (B, fft/2+1)
-    nb = fft_size // 2 + 1
-    bands = np.linspace(1, nb, 7, dtype=int)         # 6 log-ish bands
-    f_freq = [jnp.log1p(jnp.sum(power[..., a:b], axis=-1))
-              for a, b in zip(bands[:-1], bands[1:])]
-    return jnp.stack(f_time + f_freq, axis=-1)
+    return jnp.stack(f_time + band_power_features(power, fft_size), axis=-1)
 
 
 def svm_predict(features, w, b):

@@ -111,6 +111,28 @@ def fft_bitrev(re, im=None, *, inverse: bool = False):
     return re, im
 
 
+def untangle_rfft(Zr, Zi, wr, wi):
+    """Untangle the packed N/2 spectrum Z into the length-(N/2 + 1) rfft:
+    X[k] = (Z[k]+conj(Z[-k]))/2 - i/2 * e^{-2pi i k/N} (Z[k]-conj(Z[-k])),
+    Nyquist bin X[N/2] = Re(Z[0]) - Im(Z[0]).
+
+    wr/wi: the (m,) cos/sin of -2*pi*k/N. The single source of the epilogue
+    math — shared by this module, kernels/fft/ops.py, and the fused
+    application kernel (kernels/pipeline)."""
+    m = Zr.shape[-1]
+    idx = (-jnp.arange(m)) % m                     # Z[N/2 - k] with wrap
+    Zcr, Zci = Zr[..., idx], -Zi[..., idx]         # conj(Z[-k])
+    er, ei = (Zr + Zcr) * 0.5, (Zi + Zci) * 0.5
+    or_, oi = (Zr - Zcr) * 0.5, (Zi - Zci) * 0.5
+    # prod = w * o; then (-i*prod).re = prod.im, (-i*prod).im = -prod.re
+    pr = wr * or_ - wi * oi
+    pi = wr * oi + wi * or_
+    nyq = Zr[..., :1] - Zi[..., :1]
+    Xr = jnp.concatenate([er + pi, nyq], axis=-1)
+    Xi = jnp.concatenate([ei - pr, jnp.zeros_like(nyq)], axis=-1)
+    return Xr, Xi
+
+
 def rfft_packed(x, *, natural_order: bool = True):
     """Real-valued FFT via the paper's N-real -> N/2-complex packing.
 
@@ -120,24 +142,9 @@ def rfft_packed(x, *, natural_order: bool = True):
     zr, zi = x[..., 0::2], x[..., 1::2]            # pack: z = even + i*odd
     Zr, Zi = fft(zr, zi, natural_order=natural_order)
     m = n // 2
-    idx = (-jnp.arange(m)) % m                     # Z[N/2 - k] with wrap
-    Zcr, Zci = Zr[..., idx], -Zi[..., idx]         # conj(Z[-k])
-    # untangle: X[k] = (Z[k]+conj(Z[-k]))/2 - i/2 * e^{-2pi i k/N} (Z[k]-conj(Z[-k]))
     ang = -2.0 * np.pi * np.arange(m) / n
     wr, wi = jnp.asarray(np.cos(ang), x.dtype), jnp.asarray(np.sin(ang), x.dtype)
-    er, ei = (Zr + Zcr) * 0.5, (Zi + Zci) * 0.5
-    or_, oi = (Zr - Zcr) * 0.5, (Zi - Zci) * 0.5
-    # -i/2 * w * o  (w complex, o complex): (-i*w) = (wi, -wr)... compute directly
-    # prod = w * o
-    pr = wr * or_ - wi * oi
-    pi = wr * oi + wi * or_
-    Xr = er + pi          # + (-i*prod).re = pi? (-i)(pr+i pi) = pi - i pr
-    Xi = ei - pr
-    # append the Nyquist bin X[N/2] = Re(Z[0]) - Im(Z[0])
-    nyq_r = (Zr[..., :1] - Zi[..., :1]) * 1.0
-    Xr = jnp.concatenate([Xr, nyq_r], axis=-1)
-    Xi = jnp.concatenate([Xi, jnp.zeros_like(nyq_r)], axis=-1)
-    return Xr, Xi
+    return untangle_rfft(Zr, Zi, wr, wi)
 
 
 def fft_reference(x_complex):

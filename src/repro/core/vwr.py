@@ -52,6 +52,24 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def resolve_block_rows(rows: int, row_bytes: int, *, elem_bytes: int = 4,
+                       spec: VWRSpec | None = None,
+                       override: int | None = None) -> int:
+    """The row-block every Pallas kernel stages per grid step: `override`
+    (e.g. an autotuned winner) when given, else the largest block of
+    `row_bytes` rows fitting the VWRSpec budget — always decremented to a
+    divisor of `rows` so the grid tiles exactly."""
+    if override:
+        rb = min(rows, override)
+    else:
+        spec = spec or VWRSpec()
+        rb = max(1, min(rows, spec.max_block_bytes(elem_bytes) //
+                        max(1, row_bytes)))
+    while rows % rb:
+        rb -= 1
+    return rb
+
+
 def plan_blocks(shape: tuple, elem_bytes: int,
                 spec: VWRSpec | None = None) -> tuple:
     """Choose a hardware-aligned VMEM block shape for an (R, C) operand.

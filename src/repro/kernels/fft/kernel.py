@@ -22,7 +22,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.core.vwr import VWRSpec
+from repro.core.vwr import VWRSpec, resolve_block_rows
 
 
 def twiddle_table(n: int, inverse: bool = False) -> tuple[np.ndarray, np.ndarray]:
@@ -69,17 +69,20 @@ def fft_kernel(re_ref, im_ref, wr_ref, wi_ref, ore_ref, oim_ref, *,
     oim_ref[...] = im.reshape(rb, n_total).astype(oim_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("inverse", "interpret"))
-def fft_pallas(re, im, *, inverse: bool = False, interpret: bool = True):
-    """Batched complex FFT. re/im: (R, N), N a power of two."""
+@functools.partial(jax.jit,
+                   static_argnames=("inverse", "interpret", "block_rows"))
+def fft_pallas(re, im, *, inverse: bool = False, interpret: bool = True,
+               block_rows: int | None = None):
+    """Batched complex FFT. re/im: (R, N), N a power of two.
+
+    ``block_rows`` overrides the static VWRSpec budget (core/autotune.py
+    feeds a measured winner through here)."""
     R, N = re.shape
     stages = int(np.log2(N))
     assert 1 << stages == N, f"N={N} not a power of 2"
     wr, wi = twiddle_table(N, inverse)
-    spec = VWRSpec(n_vwrs=3)
-    rb = max(1, min(R, spec.max_block_bytes(4) // (N * 4)))
-    while R % rb:
-        rb -= 1
+    rb = resolve_block_rows(R, N * 4, spec=VWRSpec(n_vwrs=3),
+                            override=block_rows)
     out = pl.pallas_call(
         functools.partial(fft_kernel, stages=stages),
         out_shape=(jax.ShapeDtypeStruct((R, N), re.dtype),

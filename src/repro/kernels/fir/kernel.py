@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.core.vwr import VWRSpec
+from repro.core.vwr import resolve_block_rows
 
 
 def fir_kernel(x_ref, halo_ref, taps_ref, o_ref, *, k: int):
@@ -29,9 +29,14 @@ def fir_kernel(x_ref, halo_ref, taps_ref, o_ref, *, k: int):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "seq_block"))
-def fir_pallas(x, taps, *, seq_block: int = 2048, interpret: bool = True):
-    """x: (R, S); taps: (k,). Causal FIR along the last axis."""
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "seq_block", "block_rows"))
+def fir_pallas(x, taps, *, seq_block: int = 2048, interpret: bool = True,
+               block_rows: int | None = None):
+    """x: (R, S); taps: (k,). Causal FIR along the last axis.
+
+    ``block_rows`` overrides the static VWRSpec row budget (core/autotune.py
+    feeds a measured winner through here)."""
     R, S = x.shape
     k = int(taps.shape[0])
     sb = min(seq_block, S)
@@ -45,11 +50,8 @@ def fir_pallas(x, taps, *, seq_block: int = 2048, interpret: bool = True):
     gather_idx = ends[:, None] + jnp.arange(k - 1)[None, :]     # (nb, k-1)
     halo = jnp.where(gather_idx[None, :, :] >= 0,
                      x[:, jnp.maximum(gather_idx, 0)], 0).astype(x.dtype)
-    spec = VWRSpec()
-    rb = max(1, min(R, spec.max_block_bytes(x.dtype.itemsize) //
-                    max(1, sb * x.dtype.itemsize)))
-    while R % rb:
-        rb -= 1
+    rb = resolve_block_rows(R, sb * x.dtype.itemsize,
+                            elem_bytes=x.dtype.itemsize, override=block_rows)
     taps2 = taps.reshape(1, k).astype(jnp.float32)
     return pl.pallas_call(
         functools.partial(fir_kernel, k=k),

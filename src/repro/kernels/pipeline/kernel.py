@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: the FULL MBioTracker pipeline fused into one kernel.
+
+The paper's headline number is *application-level* (§4.4.2 / Table 5):
+chaining kernels while the data stays resident in the SPM/VWRs is where the
+energy goes away — the FIR output is consumed by the delineation, whose
+window is consumed by the feature extraction, whose features feed the SVM,
+and main memory is touched exactly twice (signal in, features out). Our
+staged `BiosignalApp` runs those stages as separate jnp/pallas calls, so
+every stage round-trips HBM. This kernel transplants the paper's staging to
+the whole application, extending what `kernels/fft/kernel.py` does for one
+kernel:
+
+    one grid step = one (rb x S) window block staged into VMEM, then
+      1. 11-tap FIR          — k unrolled shifted FMAs (paper §4.4.1),
+      2. delineation         — the mask-algebra predicates of
+                               `core.biosignal.delineate` (the paper's
+                               predicated RC code), on the VMEM-resident
+                               filtered block,
+      3. time features       — masked interval statistics,
+      4. 512-pt packed rFFT  — the Stockham stages of the FFT kernel with a
+                               staged twiddle table + untangle epilogue,
+                               reduced to 6 log-band powers,
+      5. linear SVM          — margin + argmax class,
+    and ONE HBM write of (filtered, features, margin, class).
+
+Inter-stage tensors never leave the block: the working set is budgeted
+against `VWRSpec(n_vwrs=4)` (raw + filtered + FFT planes + table/epilogue
+scratch). Numerics follow `core.biosignal` op-for-op so the fused outputs
+match the staged app to f32 tolerance; the delineation/median stage leans on
+`sort`, which the interpret path executes directly and remains the known
+gap for a fully Mosaic-compiled build (tracked in ROADMAP).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.biosignal import (band_power_features, delineate,
+                                  interval_time_features)
+from repro.core.fft import untangle_rfft
+from repro.core.vwr import VWRSpec, resolve_block_rows
+from repro.kernels.fft.kernel import twiddle_table
+
+
+def _fir_stage(x, taps_ref, k: int):
+    """Causal k-tap FIR on the staged block — unrolled shifted FMAs, the
+    in-VMEM mirror of `core.fir.fir_direct`."""
+    rb, S = x.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0)))
+    y = jnp.zeros_like(x)
+    for i in range(k):                   # unrolled taps == circular shifts
+        y = y + taps_ref[0, i] * xp[:, k - 1 - i: k - 1 - i + S]
+    return y
+
+
+def untangle_table(fft_size: int) -> np.ndarray:
+    """(2, m) packed untangle factors e^{-2*pi*i*k/N} for the real-FFT
+    epilogue — staged into VMEM alongside the twiddles (the paper keeps
+    both in the SPM)."""
+    m = fft_size // 2
+    ang = -2.0 * np.pi * np.arange(m) / fft_size
+    return np.stack([np.cos(ang), np.sin(ang)]).astype(np.float32)
+
+
+def _rfft_band_powers(seg, wr_ref, wi_ref, u_ref, *, fft_size: int):
+    """Packed real FFT (N real -> N/2 complex, Stockham stages, untangle)
+    reduced to the 6 log-band powers of `core.biosignal.extract_features`.
+
+    The butterfly stages are the FFT kernel's body verbatim, reading the
+    staged (stages, m/2) twiddle table and the (2, m) untangle table.
+    """
+    rb = seg.shape[0]
+    seg = seg - jnp.mean(seg, axis=-1, keepdims=True)
+    zr, zi = seg[:, 0::2], seg[:, 1::2]            # pack: z = even + i*odd
+    m = fft_size // 2
+    stages = int(np.log2(m))
+    g, n = 1, m
+    re = zr.reshape(rb, 1, m)
+    im = zi.reshape(rb, 1, m)
+    for s in range(stages):
+        ar, ai = re[..., : n // 2], im[..., : n // 2]
+        br, bi = re[..., n // 2:], im[..., n // 2:]
+        wr = wr_ref[s, : n // 2].reshape(1, 1, n // 2)
+        wi = wi_ref[s, : n // 2].reshape(1, 1, n // 2)
+        t0r, t0i = ar + br, ai + bi
+        dr, di = ar - br, ai - bi
+        t1r = dr * wr - di * wi
+        t1i = dr * wi + di * wr
+        # words-interleaving regroup (self-sorting Stockham)
+        re = jnp.concatenate([t0r[:, None], t1r[:, None]], axis=1).reshape(
+            rb, 2 * g, n // 2)
+        im = jnp.concatenate([t0i[:, None], t1i[:, None]], axis=1).reshape(
+            rb, 2 * g, n // 2)
+        g, n = 2 * g, n // 2
+    Zr = re.reshape(rb, m)
+    Zi = im.reshape(rb, m)
+    Xr, Xi = untangle_rfft(Zr, Zi, u_ref[0, :], u_ref[1, :])
+    power = jnp.square(Xr) + jnp.square(Xi)        # (rb, fft/2+1)
+    return band_power_features(power, fft_size)
+
+
+def pipeline_kernel(x_ref, taps_ref, wr_ref, wi_ref, u_ref, w_ref, b_ref,
+                    filt_ref, feat_ref, marg_ref, cls_ref, *,
+                    n_taps: int, fft_size: int):
+    x = x_ref[...].astype(jnp.float32)             # (rb, S) staged once
+    # --- stage 1: preprocessing (11-tap FIR) ---
+    filt = _fir_stage(x, taps_ref, n_taps)
+    # --- stage 2: delineation (predicated mask algebra, never leaves VMEM)
+    is_max, is_min = delineate(filt)
+    # --- stage 3a: time features (masked interval statistics) ---
+    f_time = interval_time_features(is_max, is_min)
+    # --- stage 3b: frequency features (packed rFFT band powers) ---
+    f_freq = _rfft_band_powers(filt[:, :fft_size], wr_ref, wi_ref, u_ref,
+                               fft_size=fft_size)
+    feats = jnp.stack(f_time + f_freq, axis=-1)    # (rb, 12)
+    # --- stage 4: linear SVM margin + class ---
+    margin = jnp.dot(feats, w_ref[...], preferred_element_type=jnp.float32
+                     ) + b_ref[0]
+    cls = jnp.argmax(margin, axis=-1).astype(jnp.int32)
+    # --- the ONE HBM write ---
+    filt_ref[...] = filt.astype(filt_ref.dtype)
+    feat_ref[...] = feats
+    marg_ref[...] = margin
+    cls_ref[...] = cls[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fft_size", "interpret", "block_rows"))
+def pipeline_pallas(signal, taps, w, b, *, fft_size: int = 512,
+                    interpret: bool = True, block_rows: int | None = None):
+    """Fused MBioTracker pipeline. signal: (R, S) windows, S >= fft_size.
+
+    Returns the same dict as the staged `BiosignalApp.__call__`:
+    {"filtered": (R,S), "features": (R,F), "margin": (R,C), "class": (R,)}.
+    Exactly ONE `pallas_call` runs per window batch.
+    """
+    R, S = signal.shape
+    k = int(taps.shape[0])
+    F, C = w.shape
+    assert S >= fft_size, (S, fft_size)
+    m = fft_size // 2
+    stages = int(np.log2(m))
+    assert 1 << stages == m, f"fft_size={fft_size} not a power of 2"
+    wr, wi = twiddle_table(m)
+    # raw + filtered + two FFT planes ~= 4 live VWR blocks
+    rb = resolve_block_rows(R, S * 4, spec=VWRSpec(n_vwrs=4),
+                            override=block_rows)
+    taps2 = jnp.asarray(taps, jnp.float32).reshape(1, k)
+    b2 = jnp.asarray(b, jnp.float32).reshape(1, C)
+    filt, feats, margin, cls = pl.pallas_call(
+        functools.partial(pipeline_kernel, n_taps=k, fft_size=fft_size),
+        out_shape=(jax.ShapeDtypeStruct((R, S), signal.dtype),
+                   jax.ShapeDtypeStruct((R, F), jnp.float32),
+                   jax.ShapeDtypeStruct((R, C), jnp.float32),
+                   jax.ShapeDtypeStruct((R, 1), jnp.int32)),
+        in_specs=[
+            pl.BlockSpec((rb, S), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, k), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((stages, m // 2), lambda i: (0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((stages, m // 2), lambda i: (0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((2, m), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((F, C), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, C), lambda i: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=(
+            pl.BlockSpec((rb, S), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((rb, F), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((rb, C), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((rb, 1), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ),
+        grid=(R // rb,),
+        interpret=interpret,
+    )(signal, taps2, jnp.asarray(wr), jnp.asarray(wi),
+      jnp.asarray(untangle_table(fft_size)), jnp.asarray(w, jnp.float32), b2)
+    return {"filtered": filt, "features": feats, "margin": margin,
+            "class": cls[:, 0]}

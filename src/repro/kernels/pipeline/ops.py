@@ -1,0 +1,41 @@
+"""Public API for the fused biosignal pipeline kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pipeline.kernel import pipeline_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def biosignal_pipeline(signal, taps, w, b, *, fft_size: int = 512,
+                       block_rows: int | None = None,
+                       autotune: bool = False):
+    """Run the full MBioTracker pipeline on (R, S) windows in ONE fused
+    Pallas call. Returns the staged app's output dict.
+
+    ``block_rows`` pins the per-grid-step row-block; ``autotune=True``
+    instead picks it from measured candidates (cached per shape) — the
+    measured replacement for the static VWRSpec budget formula.
+    """
+    interpret = _interpret()
+    if autotune and block_rows is None:
+        from repro.core.autotune import tuned_block_rows
+
+        R, S = signal.shape
+        block_rows = tuned_block_rows(
+            "biosignal_pipeline", R, (S, fft_size, str(signal.dtype)),
+            lambda rb: pipeline_pallas(signal, taps, w, b, fft_size=fft_size,
+                                       interpret=interpret, block_rows=rb))
+    return pipeline_pallas(signal, taps, w, b, fft_size=fft_size,
+                           interpret=interpret, block_rows=block_rows)
+
+
+def app_pipeline(app, signal, *, block_rows: int | None = None,
+                 autotune: bool = False):
+    """Fused execution of a `core.biosignal.BiosignalApp` instance."""
+    return biosignal_pipeline(signal, app.fir_taps, app.svm_w, app.svm_b,
+                              fft_size=app.fft_size, block_rows=block_rows,
+                              autotune=autotune)

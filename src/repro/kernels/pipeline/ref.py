@@ -1,0 +1,76 @@
+"""Staged references for the fused pipeline kernel.
+
+Two baselines, matching the paper's Table 5 columns:
+
+* ``staged_kernel_fns`` — kernel-at-a-time offload: each stage is its own
+  kernel launch with an HBM round trip between stages (Pallas FIR kernel,
+  jnp delineation/time features, Pallas packed-rFFT kernel, jnp SVM). This
+  is the paper's CPU+FFT-ACCEL execution model and the baseline the CI
+  ``--check-fused`` gate compares the fused kernel against.
+* ``staged_stage_fns`` — the same pipeline as three separately-jitted jnp
+  calls (the seed `BiosignalApp` decomposition); informational.
+
+For numerical tests the oracle is `core.biosignal.BiosignalApp` itself.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.biosignal import (band_power_features, delineate,
+                                  extract_features, interval_time_features,
+                                  svm_predict)
+from repro.core.fir import fir_direct
+
+
+def staged_stage_fns(taps, w, b, *, fft_size: int = 512):
+    """The pipeline as its three separately-jitted jnp stages (FIR,
+    features, SVM). Each call materializes its output — the HBM round
+    trip."""
+    taps = jnp.asarray(taps)
+    fir_fn = jax.jit(lambda s: fir_direct(s, taps))
+    feat_fn = jax.jit(functools.partial(extract_features, fft_size=fft_size))
+    svm_fn = jax.jit(lambda f: svm_predict(f, w, b))
+    return fir_fn, feat_fn, svm_fn
+
+
+def staged_kernel_fns(taps, w, b, *, fft_size: int = 512):
+    """Kernel-at-a-time execution: one launch per stage, every inter-stage
+    tensor round-tripping HBM. Returns a single callable running the chain.
+    """
+    from repro.kernels.fir.ops import fir as kfir
+    from repro.kernels.fft.ops import rfft as krfft
+
+    taps = jnp.asarray(taps)
+
+    @jax.jit
+    def time_feats(filtered):
+        is_max, is_min = delineate(filtered)
+        seg = filtered[..., :fft_size]
+        return (interval_time_features(is_max, is_min),
+                seg - jnp.mean(seg, axis=-1, keepdims=True))
+
+    @jax.jit
+    def finish(f_time, Xr, Xi):
+        power = jnp.square(Xr) + jnp.square(Xi)
+        feats = jnp.stack(list(f_time) + band_power_features(power, fft_size),
+                          axis=-1)
+        margin, cls = svm_predict(feats, w, b)
+        return feats, margin, cls
+
+    def run(signal):
+        filtered = kfir(signal, taps)        # launch 1: FIR kernel
+        f_time, seg = time_feats(filtered)   # launch 2: delineation/time
+        Xr, Xi = krfft(seg)                  # launch 3: packed-rFFT kernel
+        feats, margin, cls = finish(f_time, Xr, Xi)   # launch 4: bands+SVM
+        return {"filtered": filtered, "features": feats,
+                "margin": margin, "class": cls}
+
+    return run
+
+
+def pipeline_staged(signal, taps, w, b, *, fft_size: int = 512):
+    """Dict-identical kernel-at-a-time staged execution."""
+    return staged_kernel_fns(taps, w, b, fft_size=fft_size)(signal)

@@ -41,8 +41,7 @@ class Engine:
         self.queue: list[Request] = []
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode)
-        self._prefill_len = None
-        self._prefill = None
+        self._prefill = jax.jit(model.prefill)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -52,16 +51,28 @@ class Engine:
             if self.live[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.live[s] = req
-                # per-slot prefill: single-token steps (slot-isolated and
-                # simple; batched prefill is the engine's documented fast path)
-                for t, tok in enumerate(req.prompt):
-                    batch = {"tokens": jnp.full((self.slots, 1), tok,
-                                                jnp.int32),
-                             "cache_len": jnp.asarray(t, jnp.int32)}
-                    if s == 0 or True:
-                        logits, cache = self._decode(self.params, batch,
-                                                     self.cache)
+                if getattr(self.model.cfg, "is_encdec", False):
+                    # enc-dec decoders have no engine-supplied encoder
+                    # frames: prefill mode would run _encode, so keep the
+                    # token-at-a-time decode-mode admission for them
+                    for t, tok in enumerate(req.prompt):
+                        batch = {"tokens": jnp.full((self.slots, 1), tok,
+                                                    jnp.int32),
+                                 "cache_len": jnp.asarray(t, jnp.int32)}
+                        _, cache = self._decode(self.params, batch,
+                                                self.cache)
                         self.cache = self._merge_slot(cache, s)
+                else:
+                    # batched prefill: the whole prompt in ONE call — K/V
+                    # for positions [0:P) written together; the cache merge
+                    # keeps only slot s's rows (identical semantics to the
+                    # token-at-a-time loop, one dispatch instead of P)
+                    tokens = jnp.broadcast_to(
+                        jnp.asarray(req.prompt, jnp.int32)[None, :],
+                        (self.slots, len(req.prompt)))
+                    _, cache = self._prefill(self.params, {"tokens": tokens},
+                                             self.cache)
+                    self.cache = self._merge_slot(cache, s)
                 self.lens[s] = len(req.prompt)
 
     def _merge_slot(self, new_cache, slot):
@@ -93,17 +104,20 @@ class Engine:
         batch = {"tokens": jnp.asarray(last_tokens),
                  "cache_len": jnp.asarray(cl)}
         logits, self.cache = self._decode(self.params, batch, self.cache)
-        logits = np.asarray(logits[:, 0, :])
+        # one batched sample over ALL slots (dead slots ride along and are
+        # ignored below) — a single key split + categorical/argmax instead
+        # of a per-slot Python loop
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            sampled = np.asarray(jax.random.categorical(
+                sub, logits[:, 0, :] / self.temperature, axis=-1))
+        else:
+            sampled = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
         finished = []
         for s, r in enumerate(self.live):
             if r is None:
                 continue
-            if self.temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                tok = int(jax.random.categorical(
-                    sub, jnp.asarray(logits[s]) / self.temperature))
-            else:
-                tok = int(logits[s].argmax())
+            tok = int(sampled[s])
             r.out.append(tok)
             self.lens[s] += 1
             if len(r.out) >= r.max_new or self.lens[s] >= self.max_len - 1:

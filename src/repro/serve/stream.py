@@ -1,0 +1,115 @@
+"""Streaming window runtime: continuous biosignal traffic through the fused
+pipeline kernel.
+
+The paper's deployment model (§4.4.2) is a sensor feeding windows to the
+accelerator forever; ours is the serving analogue: a continuous signal is
+framed into overlapping (window, hop) frames, frames are grouped into
+fixed-size window batches, and each batch runs through the fused
+single-`pallas_call` pipeline (`kernels/pipeline`). Dispatch is
+double-buffered: while batch k's outputs are being consumed on the host,
+batch k+1 is already in flight (JAX async dispatch is the host-side
+ping-pong buffer, mirroring the SPM's double-buffered line fills). The
+row-block of the fused kernel can be autotuned from measured candidates
+(`core/autotune.py`) instead of the static VWRSpec formula.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.biosignal import BiosignalApp, make_app
+from repro.kernels.pipeline.ops import app_pipeline
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    window: int = 2048          # samples per frame (the processing window)
+    hop: int = 512              # frame stride; < window => overlapping frames
+    batch_windows: int = 8      # frames per fused-kernel dispatch
+    autotune: bool = False      # measure the kernel row-block (cached)
+    block_rows: int | None = None   # pin the row-block explicitly
+
+
+def frame_count(n_samples: int, window: int, hop: int) -> int:
+    if n_samples < window:
+        return 0
+    return 1 + (n_samples - window) // hop
+
+
+def frame_signal(signal, window: int, hop: int):
+    """(S,) continuous signal -> (n_frames, window) overlapping frames."""
+    sig = jnp.asarray(signal)
+    assert sig.ndim == 1, sig.shape
+    n = frame_count(sig.shape[0], window, hop)
+    if n == 0:
+        return jnp.zeros((0, window), sig.dtype)
+    idx = np.arange(n)[:, None] * hop + np.arange(window)[None, :]
+    return sig[jnp.asarray(idx)]
+
+
+class BiosignalStream:
+    """Drives a continuous signal through the fused pipeline kernel in
+    double-buffered window batches.
+
+    >>> stream = BiosignalStream(make_app(), StreamConfig(hop=256))
+    >>> out = stream.process(signal)          # dict over all frames
+    """
+
+    def __init__(self, app: BiosignalApp | None = None,
+                 cfg: StreamConfig | None = None):
+        self.app = app or make_app()
+        self.cfg = cfg or StreamConfig()
+        assert self.cfg.window >= self.app.fft_size, (
+            self.cfg.window, self.app.fft_size)
+        assert 0 < self.cfg.hop <= self.cfg.window
+        assert self.cfg.batch_windows > 0
+
+    def _dispatch(self, frames):
+        return app_pipeline(self.app, frames,
+                            block_rows=self.cfg.block_rows,
+                            autotune=self.cfg.autotune)
+
+    def stream(self, signal) -> Iterator[dict]:
+        """Yields one output dict per window batch (trimmed to the real
+        frames). Batch k+1 is dispatched before batch k is yielded, so the
+        consumer always overlaps with one in-flight batch."""
+        cfg = self.cfg
+        frames = frame_signal(signal, cfg.window, cfg.hop)
+        n = frames.shape[0]
+        bw = cfg.batch_windows
+        inflight: tuple[dict, int] | None = None
+        for start in range(0, n, bw):
+            batch = frames[start: start + bw]
+            valid = batch.shape[0]
+            if valid < bw:      # pad the tail batch to the fixed shape
+                batch = jnp.concatenate(
+                    [batch, jnp.zeros((bw - valid, cfg.window),
+                                      batch.dtype)], axis=0)
+            nxt = (self._dispatch(batch), valid)    # async: in flight now
+            if inflight is not None:
+                yield self._collect(*inflight)
+            inflight = nxt
+        if inflight is not None:
+            yield self._collect(*inflight)
+
+    @staticmethod
+    def _collect(out: dict, valid: int) -> dict:
+        out = jax.block_until_ready(out)
+        return {k: v[:valid] for k, v in out.items()}
+
+    def process(self, signal) -> dict:
+        """One-call convenience: all framed outputs concatenated, equal to
+        running the app on `frame_signal(signal, window, hop)` at once."""
+        chunks = list(self.stream(signal))
+        if not chunks:
+            w = self.app.svm_w.shape
+            return {"filtered": jnp.zeros((0, self.cfg.window)),
+                    "features": jnp.zeros((0, w[0])),
+                    "margin": jnp.zeros((0, w[1])),
+                    "class": jnp.zeros((0,), jnp.int32)}
+        return {k: jnp.concatenate([c[k] for c in chunks], axis=0)
+                for k in chunks[0]}

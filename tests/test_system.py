@@ -89,6 +89,22 @@ def test_engine_continuous_batching(tiny_setup):
     assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)
 
 
+def test_engine_temperature_sampling(tiny_setup):
+    """Batched categorical sampling path: one key split per step, all
+    slots sampled together."""
+    cfg, model, mesh, dc, oc, bundle = tiny_setup
+    from repro.models import init_model_params
+
+    params = init_model_params(model)
+    eng = Engine(model, params, slots=2, max_len=64, temperature=1.0, seed=7)
+    for rid in range(3):
+        eng.submit(Request(rid, [1 + rid, 2], max_new=3))
+    done = eng.run_to_completion()
+    assert len(done) == 3
+    assert all(len(r.out) == 3 for r in done)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)
+
+
 @pytest.mark.slow
 def test_engine_matches_batch_decode(tiny_setup):
     """Engine greedy decode == argmax over model.forward continuation."""
