@@ -1,0 +1,59 @@
+"""Diff two autotune-winner artifacts (BENCH_autotune.json) across commits.
+
+CI's bench smoke writes the measured block-size winners next to the
+BENCH_*.json perf records; this tool compares the current commit's winners
+against the previous run's artifact and prints added / removed / changed
+entries, so a perf regression that traces back to a different measured
+block choice is visible in the job log.
+
+Usage:  python -m benchmarks.diff_autotune OLD.json NEW.json [--strict]
+
+Exit status is 0 unless ``--strict`` is given and winners changed —
+winner drift on shared CI runners is expected noise, not a failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {json.dumps(e["key"]): int(e["block_rows"])
+            for e in data.get("autotune_winners", [])}
+
+
+def diff(old: dict, new: dict) -> list[str]:
+    lines = []
+    for k in sorted(new.keys() - old.keys()):
+        lines.append(f"+ {k} -> {new[k]}")
+    for k in sorted(old.keys() - new.keys()):
+        lines.append(f"- {k} (was {old[k]})")
+    for k in sorted(old.keys() & new.keys()):
+        if old[k] != new[k]:
+            lines.append(f"~ {k}: {old[k]} -> {new[k]}")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when any winner changed")
+    args = ap.parse_args()
+    old, new = _load(args.old), _load(args.new)
+    lines = diff(old, new)
+    if not lines:
+        print(f"autotune winners unchanged ({len(new)} entries)")
+        return
+    print(f"autotune winners changed ({len(old)} -> {len(new)} entries):")
+    for line in lines:
+        print(" ", line)
+    if args.strict:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,16 @@ def main() -> None:
                     help="fail if any */pipeline_fused row is slower than "
                          "its */pipeline_staged sibling (interpret-mode "
                          "regression gate for the fused application kernel)")
+    ap.add_argument("--check-stream", action="store_true",
+                    help="fail unless the raw-signal in-kernel-framing row "
+                         "(*/stream_fused) beats its host-framed fused "
+                         "sibling (*/stream_framed_fused) by >= 1.25x — "
+                         "the single-residency streaming gate (rows are "
+                         "timed paired, alternating min-of-reps)")
+    ap.add_argument("--autotune-json", default=None, metavar="PATH",
+                    help="warm-start the autotune cache from PATH (if it "
+                         "exists) and write the measured winners back — "
+                         "the cross-commit record CI uploads and diffs")
     args = ap.parse_args()
 
     selected = list(mods)
@@ -43,6 +53,14 @@ def main() -> None:
         if unknown:
             raise SystemExit(f"unknown bench module(s) {unknown}; "
                              f"choose from {sorted(mods)}")
+
+    if args.autotune_json:
+        from repro.core import autotune
+
+        loaded = autotune.load_cache(args.autotune_json)
+        if loaded:
+            print(f"autotune: warm-started {loaded} winners from "
+                  f"{args.autotune_json}", file=sys.stderr)
 
     print("name,us_per_call,derived")
     rows, failed = [], 0
@@ -67,6 +85,28 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "failed": failed,
                        "modules": selected}, f, indent=1)
+    if args.autotune_json:
+        from repro.core import autotune
+
+        saved = autotune.save_cache(args.autotune_json)
+        print(f"autotune: saved {saved} winners to {args.autotune_json}",
+              file=sys.stderr)
+    if args.check_stream:
+        by_name = {r["name"]: r["us_per_call"] for r in rows}
+        pairs = [(n, n.rsplit("stream_fused", 1)[0] + "stream_framed_fused")
+                 for n in by_name if n.endswith("stream_fused")]
+        if not pairs:
+            print("check-stream: no stream_fused rows found",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        for stream, framed in pairs:
+            us, uf = by_name[stream], by_name.get(framed)
+            if uf is None or uf < 1.25 * us:
+                print(f"check-stream FAILED: {stream}={us:.1f}us vs "
+                      f"{framed}={uf}us (need >= 1.25x)", file=sys.stderr)
+                raise SystemExit(1)
+            print(f"check-stream ok: {stream} {us:.1f}us, {framed} "
+                  f"{uf:.1f}us ({uf / us:.2f}x)")
     if args.check_fused:
         by_name = {r["name"]: r["us_per_call"] for r in rows}
         pairs = [(n, n.rsplit("pipeline_fused", 1)[0] + "pipeline_staged")

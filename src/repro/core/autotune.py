@@ -13,6 +13,8 @@ an ``autotune=True`` knob) and the streaming window runtime.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -30,6 +32,37 @@ def clear_cache() -> None:
 
 def cache_snapshot() -> dict:
     return dict(_CACHE)
+
+
+def _freeze(x):
+    """JSON round-trip: lists (de)serialize to tuples, recursively — cache
+    keys are nested tuples like (name, rows, window, hop, outputs, dtype)."""
+    return tuple(_freeze(v) for v in x) if isinstance(x, (list, tuple)) else x
+
+
+def save_cache(path: str) -> int:
+    """Persist the winners as a JSON artifact (next to the BENCH_*.json
+    perf records) so later processes warm-start instead of re-measuring
+    and CI can diff winners across commits. Returns the entry count."""
+    entries = [{"key": list(k), "block_rows": v}
+               for k, v in sorted(_CACHE.items(), key=lambda kv: str(kv[0]))]
+    with open(path, "w") as f:
+        json.dump({"autotune_winners": entries}, f, indent=1, default=list)
+    return len(entries)
+
+
+def load_cache(path: str) -> int:
+    """Warm-start the in-process cache from a `save_cache` artifact.
+    Missing file is not an error (first run of a fresh checkout). Returns
+    the number of loaded entries."""
+    if not os.path.exists(path):
+        return 0
+    with open(path) as f:
+        data = json.load(f)
+    entries = data.get("autotune_winners", [])
+    for e in entries:
+        _CACHE[_freeze(e["key"])] = int(e["block_rows"])
+    return len(entries)
 
 
 def candidate_block_rows(rows: int, *, max_candidates: int = 4) -> list[int]:
@@ -78,6 +111,32 @@ def tuned_block_rows(name: str, rows: int, extras: tuple,
     """One-call wiring for the kernel `ops` wrappers: build the per-shape
     cache key, enumerate candidates, measure, cache. ``run(rb)`` executes
     the kernel with that block size."""
-    key = (name, rows) + tuple(extras)
+    key = _freeze((name, rows) + tuple(extras))
     return autotune_block_rows(key, candidate_block_rows(rows),
                                lambda rb: lambda: run(rb))
+
+
+def candidate_stream_block_frames(n_frames: int, window: int, hop: int,
+                                  *, max_candidates: int = 4) -> list[int]:
+    """Candidate frame-blocks for the raw-signal streaming kernel. The
+    grid pads the frame count, so candidates need not divide it — but the
+    body chunk (block_frames*hop samples) must cover the window-hop
+    overlap spill, which floors every candidate."""
+    floor = 1 if window <= hop else -(-(window - hop) // hop)
+    pool = {c for c in (1, 2, 4, 8, 16, SUBLANES * 4)
+            if floor <= c <= max(n_frames, floor)}
+    pool |= {floor, min(max(n_frames, floor), max(8, floor))}
+    return sorted(pool, reverse=True)[:max_candidates]
+
+
+def tuned_stream_block_frames(name: str, n_frames: int, window: int,
+                              hop: int, outputs: tuple, dtype: str,
+                              run: Callable[[int], object]) -> int:
+    """`tuned_block_rows` for the raw-signal streaming kernel: the cache
+    key carries the full (window, hop, outputs) shape — the same window
+    batch tuned for classification-only traffic (no `filtered` write) may
+    legitimately pick a different block than the all-outputs variant."""
+    key = _freeze((name, n_frames, window, hop, outputs, dtype))
+    return autotune_block_rows(
+        key, candidate_stream_block_frames(n_frames, window, hop),
+        lambda rb: lambda: run(rb))

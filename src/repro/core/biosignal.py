@@ -17,6 +17,7 @@ Everything is jit-able; the windowed app is a pure function of the signal.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 import jax
@@ -30,12 +31,37 @@ from repro.core.fir import fir_direct, lowpass_taps
 # Delineation
 # ---------------------------------------------------------------------------
 
-def delineate(x, *, min_prominence: float = 0.3):
+def _dilate(x, reduce, d: int):
+    """Running reduce (max/min) over [t - d, t + d] in log-steps of
+    edge-padded shifts — the vectorized morphological dilation that backs
+    the delineation refractory window. Shift+select only (Mosaic-safe)."""
+    steps, span, s = [], 0, 1
+    while span < d:
+        steps.append(min(s, d - span))
+        span += steps[-1]
+        s *= 2
+    fwd = bwd = x
+    for s in steps:
+        fwd = reduce(fwd, jnp.concatenate(
+            [fwd[..., s:], fwd[..., -1:].repeat(s, axis=-1)], axis=-1))
+        bwd = reduce(bwd, jnp.concatenate(
+            [bwd[..., :1].repeat(s, axis=-1), bwd[..., :-s]], axis=-1))
+    return reduce(fwd, bwd)
+
+
+def delineate(x, *, min_prominence: float = 0.3, min_distance: int = 15):
     """Detect local maxima/minima: strict neighbour extremum + amplitude
-    gate (x must rise above mean + prominence*(max-mean), resp. below).
+    gate (x must rise above mean + prominence*(max-mean), resp. below) +
+    a +-`min_distance`-sample refractory window (the extremum must
+    dominate its neighbourhood — breaths are seconds apart at fs=64 Hz,
+    so sensor ripple a few samples wide is not a breath).
 
     Returns (is_max, is_min): boolean masks over the window. This is the
-    paper's 'lots of if conditions' step, recast as vector predicates.
+    paper's 'lots of if conditions' step, recast as vector predicates. The
+    refractory gate also bounds the interval density — consecutive
+    extrema sit >= min_distance + 1 apart (ties excepted), which keeps the
+    interval-median's fixed-size `INTERVAL_SLOTS` sorting network on its
+    fast path for windows up to INTERVAL_SLOTS*(min_distance+1) samples.
     """
     prev = jnp.roll(x, 1, axis=-1)
     nxt = jnp.roll(x, -1, axis=-1)
@@ -44,14 +70,20 @@ def delineate(x, *, min_prominence: float = 0.3):
     lo = jnp.min(x, axis=-1, keepdims=True)
     is_max = (x > prev) & (x >= nxt) & (x > mu + min_prominence * (hi - mu))
     is_min = (x < prev) & (x <= nxt) & (x < mu - min_prominence * (mu - lo))
+    if min_distance > 0:
+        is_max &= x >= _dilate(x, jnp.maximum, min_distance)
+        is_min &= x <= _dilate(x, jnp.minimum, min_distance)
     # edges are never extrema
     edge = jnp.zeros_like(is_max).at[..., 0].set(True).at[..., -1].set(True)
     return is_max & ~edge, is_min & ~edge
 
 
-def _masked_intervals(mask):
-    """Mean/median/RMS of gaps between consecutive True positions (masked
-    statistics, fixed shapes — jit-friendly)."""
+def _masked_intervals_sort(mask):
+    """Seed reference: mean/median/RMS of gaps between consecutive True
+    positions via compaction `sort` + `take_along_axis`. Kept ONLY as the
+    equivalence oracle for `_masked_intervals` — `sort`/`take_along_axis`
+    are the known Mosaic-compile gap, so nothing on the kernel path may
+    call this."""
     S = mask.shape[-1]
     pos = jnp.arange(S)
     idx = jnp.where(mask, pos, S + 1)
@@ -69,17 +101,233 @@ def _masked_intervals(mask):
     return mean, med, rms
 
 
+@functools.lru_cache(maxsize=None)
+def oddeven_tables(n: int) -> tuple:
+    """Stage tables of Batcher's odd-even merge sort for a power-of-two
+    length `n`: (lo, hi, ks) numpy arrays of shape (n_stages, n) x2 and
+    (n_stages, 1). Stage s compare-exchanges the disjoint pairs
+    (t, t + ks[s]): a slot with lo[s, t] keeps min(x[t], x[t+k]), a slot
+    with hi[s, t] keeps max(x[t], x[t-k]). Classic Batcher pairing — t in
+    the upper-k half of its 2k-group (offset by k%p), both endpoints in
+    the same 2p-block.
+
+    The tables are STAGED OPERANDS of the fused kernel (like the FFT
+    twiddle tables — the paper keeps such tables in the SPM): Pallas
+    kernels cannot capture array constants, and recomputing the masks
+    every `fori_loop` iteration doubles the per-stage op count."""
+    assert n >= 1 and n & (n - 1) == 0, n
+    t = np.arange(n)
+    los, his, ks = [], [], []
+    p = 1
+    while p < n:
+        k = p
+        while k >= 1:
+            lo = (((t - (k % p)) % (2 * k)) < k) & (t + k < n) & \
+                ((t // (2 * p)) == ((t + k) // (2 * p)))
+            los.append(lo)
+            his.append(np.roll(lo, k))   # lo slots >= n-k are False: no wrap
+            ks.append(k)
+            k //= 2
+        p *= 2
+    if not los:                          # n == 1: the empty network
+        return (np.zeros((0, n), bool), np.zeros((0, n), bool),
+                np.zeros((0, 1), np.int32))
+    return (np.stack(los), np.stack(his),
+            np.asarray(ks, np.int32).reshape(-1, 1))
+
+
+def network_sort(x, tables=None):
+    """Ascending sort along the last (power-of-two) axis via Batcher's
+    odd-even merge network: O(log^2 n) vectorized stages of shift +
+    select, driven by the `oddeven_tables` stage masks. No `sort`,
+    `take_along_axis`, or gather — shifts, compares and selects only,
+    closing the fused kernel's Mosaic-compile gap. `tables` lets a Pallas
+    caller pass the masks as staged kernel operands."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"network_sort needs a power-of-two length: {n}"
+    lo_t, hi_t, k_t = tables if tables is not None else tuple(
+        jnp.asarray(a) for a in oddeven_tables(n))
+    n_stages = lo_t.shape[0]
+    if n_stages == 0:                # n == 1: the empty network
+        return x
+
+    def stage(s, y):
+        k = k_t[s, 0]
+        lo = jax.lax.dynamic_slice_in_dim(lo_t, s, 1, 0)[0]
+        hi = jax.lax.dynamic_slice_in_dim(hi_t, s, 1, 0)[0]
+        z = jnp.concatenate([y, y], axis=-1)          # one buffer, two views
+        fwd = jax.lax.dynamic_slice_in_dim(z, k, n, z.ndim - 1)
+        bwd = jax.lax.dynamic_slice_in_dim(z, n - k, n, z.ndim - 1)
+        return jnp.where(lo, jnp.minimum(y, fwd),
+                         jnp.where(hi, jnp.maximum(y, bwd), y))
+
+    # NOTE: keep the loop rolled — XLA CPU pessimizes any unrolling of this
+    # body (unroll=4 measured 3x slower, full unroll 60x slower)
+    return jax.lax.fori_loop(0, n_stages, stage, x)
+
+
+def _network_sort_arith(x):
+    """`network_sort` with the stage masks recomputed from iota arithmetic
+    each iteration instead of read from tables. Slower (≈2x), but capture-
+    free: this is the exact-fallback path inside Pallas kernels, where the
+    fixed-size stage tables are sized for `INTERVAL_SLOTS` and a full-
+    length sort has no table operand to read."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, n
+    t = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def stage(x, a, j):
+        k = jnp.left_shift(1, a - j)
+        kmodp = jnp.where(j == 0, 0, k)      # k % p: k == p exactly at j == 0
+        lo = (((t - kmodp) & (2 * k - 1)) < k) & (t + k < n) & \
+            ((t >> (a + 1)) == ((t + k) >> (a + 1)))
+        hi = jnp.roll(lo, k)
+        fwd = jnp.roll(x, -k, axis=-1)
+        bwd = jnp.roll(x, k, axis=-1)
+        return jnp.where(lo, jnp.minimum(x, fwd),
+                         jnp.where(hi, jnp.maximum(x, bwd), x))
+
+    def outer(a, y):                  # p = 2^a; inner: k = p, p/2, ..., 1
+        return jax.lax.fori_loop(
+            0, a + 1, lambda j, z: stage(z, a, j), y)
+
+    return jax.lax.fori_loop(0, max(n.bit_length() - 1, 0), outer, x)
+
+
+def _interval_gaps(mask):
+    """Gaps between consecutive True positions as mask algebra: a running
+    cummax of the last-seen True index replaces the seed's compaction sort.
+    Returns (gaps, valid) full-window arrays — position i carries the gap
+    to its predecessor extremum iff valid[i]."""
+    S = mask.shape[-1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    prev = jax.lax.cummax(jnp.where(mask, pos, -1), axis=mask.ndim - 1)
+    prev_excl = jnp.concatenate(
+        [jnp.full(mask.shape[:-1] + (1,), -1, prev.dtype), prev[..., :-1]],
+        axis=-1)
+    valid = mask & (prev_excl >= 0)
+    gaps = jnp.where(valid, pos - prev_excl, 0)
+    return gaps, valid
+
+
+def _masked_intervals(mask, *, sparse2: bool = False, sort_tables=None):
+    """Mean/median/RMS of gaps between consecutive True positions (masked
+    statistics, fixed shapes — jit-friendly).
+
+    Mosaic-compilable formulation: gap extraction is cummax mask algebra
+    (`_interval_gaps`), the median is `network_sort` + a one-hot k-th-order
+    pick. Matches `_masked_intervals_sort` exactly — gap values are small
+    integers, so the f32 reductions are order-independent.
+
+    ``sparse2`` promises no two ADJACENT positions are both True (always
+    the case for `delineate` extrema: a strict rise cannot follow itself),
+    letting the median pre-fold even/odd slots so the network runs at half
+    the window length."""
+    S = mask.shape[-1]
+    gaps, valid = _interval_gaps(mask)
+    nv = jnp.sum(valid, axis=-1)
+    n = jnp.maximum(nv, 1)
+    g = jnp.where(valid, gaps, 0).astype(jnp.float32)
+    mean = jnp.sum(g, axis=-1) / n
+    rms = jnp.sqrt(jnp.sum(jnp.square(g), axis=-1) / n)
+    # gaps are in [0, S] — sort in the narrowest int the window allows to
+    # halve the bytes the network moves
+    sdt = jnp.int16 if S <= 2 ** 14 else jnp.int32
+    big = jnp.iinfo(sdt).max
+    vals = jnp.where(valid, gaps, big).astype(sdt)
+    k = ((n - 1) // 2)[..., None].astype(jnp.int32)
+
+    def kth_smallest(svals):
+        sel = jax.lax.broadcasted_iota(jnp.int32, svals.shape,
+                                       svals.ndim - 1)
+        return jnp.sum(jnp.where(sel == k, svals.astype(jnp.int32), 0),
+                       axis=-1)
+
+    def pad_pow2(v, to=0):
+        L = v.shape[-1]
+        N = max(1 << max(L - 1, 0).bit_length(), to)
+        if N == L:
+            return v
+        return jnp.concatenate(
+            [v, jnp.full(mask.shape[:-1] + (N - L,), big, sdt)], axis=-1)
+
+    collide = None                     # lossy-fold guard (traced bool)
+    folded = vals
+    if sparse2 and S % 2 == 0:
+        # each even/odd slot pair SHOULD hold at most one valid gap
+        # (guaranteed for delineate extrema, which are never adjacent) —
+        # fold to S/2, but GUARD it: sparse2 is a caller promise, not a
+        # property of the mask argument
+        ev, od = vals[..., 0::2], vals[..., 1::2]
+        folded = jnp.minimum(ev, od)
+        collide = jnp.any((ev < big) & (od < big))
+    folded = pad_pow2(folded, INTERVAL_SLOTS)
+    K = INTERVAL_SLOTS
+    if folded.shape[-1] > K:
+        # compact into the fixed K-slot buffer: fold segments of N/K
+        # slots by min. Exact whenever every segment holds at most one
+        # interval (sentinels are +inf) — true for any physiological
+        # signal, where extrema sit far apart. A colliding segment
+        # anywhere joins the guard below.
+        N = folded.shape[-1]
+        seg = jnp.sum((folded < big).reshape(mask.shape[:-1] + (K, N // K)),
+                      axis=-1)
+        seg_collide = jnp.any(seg > 1)
+        collide = seg_collide if collide is None else collide | seg_collide
+        y = folded
+        while y.shape[-1] > K:
+            y = jnp.minimum(y[..., 0::2], y[..., 1::2])
+        folded = y
+
+    def fast(_):
+        return kth_smallest(network_sort(folded, tables=sort_tables))
+
+    if collide is None:
+        # no lossy fold happened: the fixed-size network is always exact
+        med = fast(None)
+    else:
+        # any collision routes the whole batch to a full-length network
+        # over the UNFOLDED gaps (rare, slower, always exact)
+        full = pad_pow2(vals)
+
+        def slow(_):
+            return kth_smallest(_network_sort_arith(full))
+
+        med = jax.lax.cond(collide, slow, fast, None)
+    med = jnp.where(nv > 0, med, 0).astype(jnp.float32)
+    return mean, med, rms
+
+
 # ---------------------------------------------------------------------------
 # Features + SVM
 # ---------------------------------------------------------------------------
 
-def interval_time_features(is_max, is_min) -> list:
+# The FIXED size of the interval median's sorting network: one VWR worth of
+# interval candidates (128 32-bit words, paper §3.1). Windows whose folded
+# gap array is longer are compacted into this buffer by segment folding
+# (exact whenever no segment holds two intervals — guarded, with a full-
+# length network fallback), so the kernel's hot sort always runs at 128
+# slots regardless of the window length.
+INTERVAL_SLOTS = 128
+
+
+def interval_time_features(is_max, is_min, sort_tables=None) -> list:
     """The 6 time features: mean/median/RMS of the inspiration and
     expiration interval lengths (single source — also run inside the fused
-    pipeline kernel)."""
+    pipeline kernel). Both masks ride ONE sorting-network pass (stacked
+    along the batch axis), and extrema are never adjacent, so the median
+    network runs at half the window length (`sparse2`). ``sort_tables``
+    forwards staged `oddeven_tables` operands from a Pallas caller."""
+    if is_max.ndim >= 2:
+        both = jnp.concatenate([is_max, is_min], axis=0)
+        mean, med, rms = _masked_intervals(both, sparse2=True,
+                                           sort_tables=sort_tables)
+        R = is_max.shape[0]
+        return [mean[:R], med[:R], rms[:R], mean[R:], med[R:], rms[R:]]
     f_time = []
     for mask in (is_max, is_min):
-        mean, med, rms = _masked_intervals(mask)
+        mean, med, rms = _masked_intervals(mask, sparse2=True,
+                                           sort_tables=sort_tables)
         f_time += [mean, med, rms]
     return f_time
 

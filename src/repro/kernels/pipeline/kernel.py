@@ -26,9 +26,17 @@ kernel:
 Inter-stage tensors never leave the block: the working set is budgeted
 against `VWRSpec(n_vwrs=4)` (raw + filtered + FFT planes + table/epilogue
 scratch). Numerics follow `core.biosignal` op-for-op so the fused outputs
-match the staged app to f32 tolerance; the delineation/median stage leans on
-`sort`, which the interpret path executes directly and remains the known
-gap for a fully Mosaic-compiled build (tracked in ROADMAP).
+match the staged app to f32 tolerance. The delineation/median stage runs a
+fixed-size odd-even sorting network off staged mask tables (no `sort` /
+`take_along_axis` / gather anywhere in the kernel — the former
+Mosaic-compile gap is closed).
+
+`pipeline_stream_pallas` is the RAW-SIGNAL entry: the grid iterates
+frame-blocks over a 1-D signal and the overlapping (window, hop) frames
+are built in-kernel from a once-staged chunk — the streaming
+single-residency analogue of the paper's §4.2 overlap reuse. Both entries
+take an `outputs` selection that elides unrequested computation and HBM
+writes.
 """
 from __future__ import annotations
 
@@ -40,8 +48,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.core.biosignal import (band_power_features, delineate,
-                                  interval_time_features)
+from repro.core.biosignal import (INTERVAL_SLOTS, band_power_features,
+                                  delineate, interval_time_features,
+                                  oddeven_tables)
 from repro.core.fft import untangle_rfft
 from repro.core.vwr import VWRSpec, resolve_block_rows
 from repro.kernels.fft.kernel import twiddle_table
@@ -104,16 +113,35 @@ def _rfft_band_powers(seg, wr_ref, wi_ref, u_ref, *, fft_size: int):
     return band_power_features(power, fft_size)
 
 
-def pipeline_kernel(x_ref, taps_ref, wr_ref, wi_ref, u_ref, w_ref, b_ref,
-                    filt_ref, feat_ref, marg_ref, cls_ref, *,
-                    n_taps: int, fft_size: int):
-    x = x_ref[...].astype(jnp.float32)             # (rb, S) staged once
-    # --- stage 1: preprocessing (11-tap FIR) ---
-    filt = _fir_stage(x, taps_ref, n_taps)
+OUTPUTS = ("filtered", "features", "margin", "class")
+
+
+def canonical_outputs(outputs) -> tuple:
+    """Validate + canonically order an output selection. `None` means all
+    four app outputs; any subset elides the unrequested HBM writes (the
+    (R, S) `filtered` write is by far the largest — dropping it is the
+    point for classification-only traffic)."""
+    if outputs is None:
+        return OUTPUTS
+    sel = tuple(outputs)
+    bad = [o for o in sel if o not in OUTPUTS]
+    assert not bad, f"unknown outputs {bad}; choose from {OUTPUTS}"
+    assert sel, "outputs selection must not be empty"
+    return tuple(o for o in OUTPUTS if o in sel)
+
+
+def _stages_from_filtered(filt, wr_ref, wi_ref, u_ref, w_ref, b_ref,
+                          sort_tables, *, fft_size: int):
+    """Stages 2-4 on a VMEM-resident filtered block: delineation mask
+    algebra -> masked interval time features + packed-rFFT band powers ->
+    linear SVM margin/class. Shared by the framed and raw-stream kernels.
+    ``sort_tables`` are the staged odd-even network masks for the interval
+    median (kept in VMEM beside the twiddles, like the paper's SPM
+    tables)."""
     # --- stage 2: delineation (predicated mask algebra, never leaves VMEM)
     is_max, is_min = delineate(filt)
     # --- stage 3a: time features (masked interval statistics) ---
-    f_time = interval_time_features(is_max, is_min)
+    f_time = interval_time_features(is_max, is_min, sort_tables=sort_tables)
     # --- stage 3b: frequency features (packed rFFT band powers) ---
     f_freq = _rfft_band_powers(filt[:, :fft_size], wr_ref, wi_ref, u_ref,
                                fft_size=fft_size)
@@ -122,62 +150,258 @@ def pipeline_kernel(x_ref, taps_ref, wr_ref, wi_ref, u_ref, w_ref, b_ref,
     margin = jnp.dot(feats, w_ref[...], preferred_element_type=jnp.float32
                      ) + b_ref[0]
     cls = jnp.argmax(margin, axis=-1).astype(jnp.int32)
-    # --- the ONE HBM write ---
-    filt_ref[...] = filt.astype(filt_ref.dtype)
-    feat_ref[...] = feats
-    marg_ref[...] = margin
-    cls_ref[...] = cls[:, None]
+    return feats, margin, cls
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("fft_size", "interpret", "block_rows"))
-def pipeline_pallas(signal, taps, w, b, *, fft_size: int = 512,
-                    interpret: bool = True, block_rows: int | None = None):
-    """Fused MBioTracker pipeline. signal: (R, S) windows, S >= fft_size.
+def _write_outputs(refs: dict, filt, feats, margin, cls):
+    """The ONE HBM write per grid step — only the requested refs exist."""
+    if "filtered" in refs:
+        refs["filtered"][...] = filt.astype(refs["filtered"].dtype)
+    if "features" in refs:
+        refs["features"][...] = feats
+    if "margin" in refs:
+        refs["margin"][...] = margin
+    if "class" in refs:
+        refs["class"][...] = cls[:, None]
 
-    Returns the same dict as the staged `BiosignalApp.__call__`:
-    {"filtered": (R,S), "features": (R,F), "margin": (R,C), "class": (R,)}.
-    Exactly ONE `pallas_call` runs per window batch.
-    """
-    R, S = signal.shape
+
+def pipeline_kernel(x_ref, taps_ref, wr_ref, wi_ref, u_ref, w_ref, b_ref,
+                    lo_ref, hi_ref, ks_ref, *out_refs, n_taps: int,
+                    fft_size: int, outputs: tuple = OUTPUTS):
+    refs = dict(zip(outputs, out_refs))
+    x = x_ref[...].astype(jnp.float32)             # (rb, S) staged once
+    # --- stage 1: preprocessing (11-tap FIR) ---
+    filt = _fir_stage(x, taps_ref, n_taps)
+    feats = margin = cls = None
+    if outputs != ("filtered",):
+        feats, margin, cls = _stages_from_filtered(
+            filt, wr_ref, wi_ref, u_ref, w_ref, b_ref,
+            (lo_ref[...], hi_ref[...], ks_ref[...]), fft_size=fft_size)
+    _write_outputs(refs, filt, feats, margin, cls)
+
+
+def _table_operands(taps, w, b, fft_size: int):
+    """The staged constant tables every pipeline kernel reads: FIR taps,
+    Stockham twiddles, untangle factors, SVM weights/bias, and the
+    fixed-size (INTERVAL_SLOTS) odd-even sorting-network stage masks for
+    the interval median — with their (broadcast) VMEM BlockSpecs."""
     k = int(taps.shape[0])
     F, C = w.shape
-    assert S >= fft_size, (S, fft_size)
     m = fft_size // 2
     stages = int(np.log2(m))
     assert 1 << stages == m, f"fft_size={fft_size} not a power of 2"
     wr, wi = twiddle_table(m)
+    lo, hi, ks = oddeven_tables(INTERVAL_SLOTS)
+    operands = (jnp.asarray(taps, jnp.float32).reshape(1, k),
+                jnp.asarray(wr), jnp.asarray(wi),
+                jnp.asarray(untangle_table(fft_size)),
+                jnp.asarray(w, jnp.float32),
+                jnp.asarray(b, jnp.float32).reshape(1, C),
+                jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(ks))
+    shapes = ((1, k), (stages, m // 2), (stages, m // 2), (2, m), (F, C),
+              (1, C), lo.shape, hi.shape, ks.shape)
+    specs = [pl.BlockSpec(s, lambda i: (0, 0), memory_space=pltpu.VMEM)
+             for s in shapes]
+    return operands, specs
+
+
+def _out_shapes_specs(R: int, S: int, F: int, C: int, rb: int, dtype,
+                      outputs: tuple):
+    table = {
+        "filtered": (jax.ShapeDtypeStruct((R, S), dtype), (rb, S)),
+        "features": (jax.ShapeDtypeStruct((R, F), jnp.float32), (rb, F)),
+        "margin": (jax.ShapeDtypeStruct((R, C), jnp.float32), (rb, C)),
+        "class": (jax.ShapeDtypeStruct((R, 1), jnp.int32), (rb, 1)),
+    }
+    out_shape = tuple(table[o][0] for o in outputs)
+    out_specs = tuple(pl.BlockSpec(table[o][1], lambda i: (i, 0),
+                                   memory_space=pltpu.VMEM) for o in outputs)
+    return out_shape, out_specs
+
+
+def _as_output_dict(outs: tuple, outputs: tuple, n: int) -> dict:
+    res = {}
+    for o, v in zip(outputs, outs):
+        res[o] = v[:n, 0] if o == "class" else v[:n]
+    return res
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fft_size", "interpret", "block_rows",
+                                    "outputs"))
+def pipeline_pallas(signal, taps, w, b, *, fft_size: int = 512,
+                    interpret: bool = True, block_rows: int | None = None,
+                    outputs: tuple = OUTPUTS):
+    """Fused MBioTracker pipeline. signal: (R, S) windows, S >= fft_size.
+
+    Returns the staged `BiosignalApp.__call__` dict restricted to
+    `outputs` (default all four): {"filtered": (R,S), "features": (R,F),
+    "margin": (R,C), "class": (R,)}. Exactly ONE `pallas_call` runs per
+    window batch; unrequested outputs are never written to HBM.
+    """
+    outputs = canonical_outputs(outputs)
+    R, S = signal.shape
+    k = int(taps.shape[0])
+    F, C = w.shape
+    assert S >= fft_size, (S, fft_size)
     # raw + filtered + two FFT planes ~= 4 live VWR blocks
     rb = resolve_block_rows(R, S * 4, spec=VWRSpec(n_vwrs=4),
                             override=block_rows)
-    taps2 = jnp.asarray(taps, jnp.float32).reshape(1, k)
-    b2 = jnp.asarray(b, jnp.float32).reshape(1, C)
-    filt, feats, margin, cls = pl.pallas_call(
-        functools.partial(pipeline_kernel, n_taps=k, fft_size=fft_size),
-        out_shape=(jax.ShapeDtypeStruct((R, S), signal.dtype),
-                   jax.ShapeDtypeStruct((R, F), jnp.float32),
-                   jax.ShapeDtypeStruct((R, C), jnp.float32),
-                   jax.ShapeDtypeStruct((R, 1), jnp.int32)),
-        in_specs=[
-            pl.BlockSpec((rb, S), lambda i: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, k), lambda i: (0, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((stages, m // 2), lambda i: (0, 0),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((stages, m // 2), lambda i: (0, 0),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((2, m), lambda i: (0, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((F, C), lambda i: (0, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, C), lambda i: (0, 0), memory_space=pltpu.VMEM),
-        ],
-        out_specs=(
-            pl.BlockSpec((rb, S), lambda i: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((rb, F), lambda i: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((rb, C), lambda i: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((rb, 1), lambda i: (i, 0), memory_space=pltpu.VMEM),
-        ),
+    tables, table_specs = _table_operands(taps, w, b, fft_size)
+    out_shape, out_specs = _out_shapes_specs(R, S, F, C, rb, signal.dtype,
+                                             outputs)
+    outs = pl.pallas_call(
+        functools.partial(pipeline_kernel, n_taps=k, fft_size=fft_size,
+                          outputs=outputs),
+        out_shape=out_shape,
+        in_specs=[pl.BlockSpec((rb, S), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM)] + table_specs,
+        out_specs=out_specs,
         grid=(R // rb,),
         interpret=interpret,
-    )(signal, taps2, jnp.asarray(wr), jnp.asarray(wi),
-      jnp.asarray(untangle_table(fft_size)), jnp.asarray(w, jnp.float32), b2)
-    return {"filtered": filt, "features": feats, "margin": margin,
-            "class": cls[:, 0]}
+    )(signal, *tables)
+    return _as_output_dict(outs, outputs, R)
+
+
+# ---------------------------------------------------------------------------
+# Raw-signal streaming kernel: in-kernel framing, single residency
+# ---------------------------------------------------------------------------
+
+def stream_frame_count(n_samples: int, window: int, hop: int) -> int:
+    return 0 if n_samples < window else 1 + (n_samples - window) // hop
+
+
+def min_stream_block_frames(window: int, hop: int) -> int:
+    """Smallest legal frame-block: the tail chunk supplies the
+    (window - hop) overlap spill, so the body chunk (block_frames * hop
+    samples) must be at least that long."""
+    return 1 if window <= hop else -(-(window - hop) // hop)
+
+
+def resolve_stream_block_frames(n_frames: int, window: int, hop: int,
+                                override: int | None = None) -> int:
+    """Frames staged per grid step. Unlike the framed kernel the block
+    need not divide (or even stay below) the frame count — the signal is
+    zero-padded and the garbage tail frames are trimmed after the call.
+    Never below `min_stream_block_frames`: the tail chunk holds only
+    block_frames*hop samples, which must cover the window-hop spill."""
+    rb = override or min(max(n_frames, 1), 8)
+    return max(1, rb, min_stream_block_frames(window, hop))
+
+
+def empty_outputs(window: int, F: int, C: int, dtype, outputs=None) -> dict:
+    """The zero-frame result, with the SAME keys/shapes/dtypes as a
+    non-empty call — the single source of truth for every degenerate path
+    (short signal, empty stream batch)."""
+    outputs = canonical_outputs(outputs)
+    empty = {"filtered": jnp.zeros((0, window), dtype),
+             "features": jnp.zeros((0, F), jnp.float32),
+             "margin": jnp.zeros((0, C), jnp.float32),
+             "class": jnp.zeros((0,), jnp.int32)}
+    return {o: empty[o] for o in outputs}
+
+
+def pipeline_stream_kernel(*refs, n_taps: int, fft_size: int, window: int,
+                           hop: int, block_frames: int, outputs: tuple,
+                           n_tails: int):
+    """One grid step = one block of `block_frames` overlapping frames,
+    built IN-KERNEL from the raw 1-D signal (the VWR/SPM single-residency
+    analogue of the paper's §4.2 overlap reuse):
+
+      * the body chunk (1, block_frames*hop) is this block's stride of raw
+        samples — its BlockSpec index_map is the hop arithmetic: block j
+        starts at sample j*block_frames*hop;
+      * `n_tails` hop-sized chunks of the SAME signal, at the hop-blocks
+        right after the body, supply the (window - hop) samples the last
+        frames spill past it — so the staged bytes are exactly one
+        contiguous chunk per block (~n_samples total), vs window/hop
+        duplicated copies for host-side framing;
+      * the 11-tap FIR runs ONCE over the chunk, frames are cut from the
+        filtered chunk by static hop slices, and only the first
+        n_taps - 1 columns of each frame are recomputed with frame-local
+        zero history, which makes the result bit-identical to filtering
+        host-framed windows;
+      * stages 2-5 and the HBM writes are shared with `pipeline_kernel`.
+    """
+    body_ref, tail_refs = refs[0], refs[1: 1 + n_tails]
+    i = 1 + n_tails
+    (taps_ref, wr_ref, wi_ref, u_ref, w_ref, b_ref, lo_ref, hi_ref,
+     ks_ref) = refs[i: i + 9]
+    refs_out = dict(zip(outputs, refs[i + 9:]))
+    chunk = jnp.concatenate(
+        [r[0, :] for r in (body_ref,) + tuple(tail_refs)]
+    )[: block_frames * hop + (window - hop)].astype(jnp.float32)
+    # --- stage 1: FIR once over the chunk (overlap shared in VMEM) ---
+    filt_chunk = _fir_stage(chunk[None, :], taps_ref, n_taps)[0]
+    filt = jnp.stack([filt_chunk[r * hop: r * hop + window]
+                      for r in range(block_frames)])
+    # frame-local FIR transient: the framed reference zero-pads each
+    # frame's history, the chunk FIR used real preceding samples — patch
+    # the first n_taps-1 columns (the only ones that can differ)
+    head = jnp.stack([chunk[r * hop: r * hop + n_taps - 1]
+                      for r in range(block_frames)])
+    filt = jnp.concatenate([_fir_stage(head, taps_ref, n_taps),
+                            filt[:, n_taps - 1:]], axis=1)
+    feats = margin = cls = None
+    if outputs != ("filtered",):
+        feats, margin, cls = _stages_from_filtered(
+            filt, wr_ref, wi_ref, u_ref, w_ref, b_ref,
+            (lo_ref[...], hi_ref[...], ks_ref[...]), fft_size=fft_size)
+    _write_outputs(refs_out, filt, feats, margin, cls)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "hop", "fft_size", "interpret",
+                                    "block_frames", "outputs"))
+def pipeline_stream_pallas(signal, taps, w, b, *, window: int, hop: int,
+                           fft_size: int = 512, interpret: bool = True,
+                           block_frames: int | None = None,
+                           outputs: tuple = OUTPUTS):
+    """Fused pipeline over a RAW 1-D signal: overlapping (window, hop)
+    frames are built inside the kernel, so HBM traffic is ~n_samples
+    instead of n_frames*window (§4.2/§4.4.2 single residency). Returns the
+    framed `pipeline_pallas` dict over the signal's n_frames frames,
+    restricted to `outputs`. Exactly ONE `pallas_call` per call.
+    """
+    outputs = canonical_outputs(outputs)
+    (S,) = signal.shape
+    k = int(taps.shape[0])
+    F, C = w.shape
+    assert window >= fft_size, (window, fft_size)
+    assert 0 < hop <= window, (hop, window)
+    n = stream_frame_count(S, window, hop)
+    if n == 0:
+        return empty_outputs(window, F, C, signal.dtype, outputs)
+    rb = resolve_stream_block_frames(n, window, hop, block_frames)
+    n_blocks = -(-n // rb)
+    L = rb * hop                     # body chunk: one block's sample stride
+    n_tails = min_stream_block_frames(window, hop) if window > hop else 0
+    # hop-granular padding: every spec must tile the padded signal, so pad
+    # the hop count up to a multiple of rb (zeros; garbage frames trimmed)
+    total = -(-(n_blocks * rb + n_tails) // rb) * L
+    sig = signal[:min(S, total)]
+    if total > sig.shape[0]:
+        sig = jnp.concatenate(
+            [sig, jnp.zeros((total - sig.shape[0],), sig.dtype)])
+    sig2 = sig.reshape(1, total)
+    in_specs = [pl.BlockSpec((1, L), lambda j: (0, j),
+                             memory_space=pltpu.VMEM)]
+    for i in range(n_tails):         # the SAME signal, i hop-blocks ahead
+        in_specs.append(pl.BlockSpec(
+            (1, hop), lambda j, i=i: (0, j * rb + rb + i),
+            memory_space=pltpu.VMEM))
+    tables, table_specs = _table_operands(taps, w, b, fft_size)
+    out_shape, out_specs = _out_shapes_specs(n_blocks * rb, window, F, C,
+                                             rb, signal.dtype, outputs)
+    outs = pl.pallas_call(
+        functools.partial(pipeline_stream_kernel, n_taps=k,
+                          fft_size=fft_size, window=window, hop=hop,
+                          block_frames=rb, outputs=outputs,
+                          n_tails=n_tails),
+        out_shape=out_shape,
+        in_specs=in_specs + table_specs,
+        out_specs=out_specs,
+        grid=(n_blocks,),
+        interpret=interpret,
+    )(*((sig2,) * (1 + n_tails)), *tables)
+    return _as_output_dict(outs, outputs, n)

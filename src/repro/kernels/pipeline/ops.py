@@ -1,9 +1,26 @@
-"""Public API for the fused biosignal pipeline kernel."""
+"""Public API for the fused biosignal pipeline kernel.
+
+Two entry points share the in-VMEM stage chain:
+
+* ``biosignal_pipeline`` — pre-framed (R, S) window batches (the PR-2
+  path, now with an ``outputs`` selection);
+* ``biosignal_pipeline_stream`` — the RAW 1-D signal: overlapping
+  (window, hop) frames are built inside the kernel from a once-staged
+  signal chunk, so HBM traffic is ~n_samples instead of n_frames*window
+  and the host never gathers frames.
+"""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.pipeline.kernel import pipeline_pallas
+from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
+                                           pipeline_pallas,
+                                           pipeline_stream_pallas,
+                                           stream_frame_count)
+
+__all__ = ["OUTPUTS", "canonical_outputs", "biosignal_pipeline",
+           "biosignal_pipeline_stream", "app_pipeline",
+           "app_pipeline_stream"]
 
 
 def _interpret() -> bool:
@@ -12,30 +29,77 @@ def _interpret() -> bool:
 
 def biosignal_pipeline(signal, taps, w, b, *, fft_size: int = 512,
                        block_rows: int | None = None,
-                       autotune: bool = False):
+                       autotune: bool = False, outputs=None):
     """Run the full MBioTracker pipeline on (R, S) windows in ONE fused
-    Pallas call. Returns the staged app's output dict.
+    Pallas call. Returns the staged app's output dict restricted to
+    ``outputs`` (default: all four keys).
 
     ``block_rows`` pins the per-grid-step row-block; ``autotune=True``
     instead picks it from measured candidates (cached per shape) — the
     measured replacement for the static VWRSpec budget formula.
     """
+    outputs = canonical_outputs(outputs)
     interpret = _interpret()
     if autotune and block_rows is None:
         from repro.core.autotune import tuned_block_rows
 
         R, S = signal.shape
         block_rows = tuned_block_rows(
-            "biosignal_pipeline", R, (S, fft_size, str(signal.dtype)),
+            "biosignal_pipeline", R,
+            (S, fft_size, outputs, str(signal.dtype)),
             lambda rb: pipeline_pallas(signal, taps, w, b, fft_size=fft_size,
-                                       interpret=interpret, block_rows=rb))
+                                       interpret=interpret, block_rows=rb,
+                                       outputs=outputs))
     return pipeline_pallas(signal, taps, w, b, fft_size=fft_size,
-                           interpret=interpret, block_rows=block_rows)
+                           interpret=interpret, block_rows=block_rows,
+                           outputs=outputs)
+
+
+def biosignal_pipeline_stream(signal, taps, w, b, *, window: int, hop: int,
+                              fft_size: int = 512,
+                              block_frames: int | None = None,
+                              autotune: bool = False, outputs=None):
+    """Run the pipeline over a RAW 1-D signal with in-kernel (window, hop)
+    framing — the single-residency streaming path. Output equals
+    ``biosignal_pipeline`` on host-framed windows, to the last bit.
+
+    ``block_frames`` pins the frames-per-grid-step; ``autotune=True``
+    measures candidates, cached under the (window, hop, outputs) shape key.
+    """
+    outputs = canonical_outputs(outputs)
+    interpret = _interpret()
+    if autotune and block_frames is None:
+        from repro.core.autotune import tuned_stream_block_frames
+
+        n = stream_frame_count(signal.shape[0], window, hop)
+        if n > 1:
+            block_frames = tuned_stream_block_frames(
+                "biosignal_pipeline_stream", n, window, hop, outputs,
+                str(signal.dtype),
+                lambda rb: pipeline_stream_pallas(
+                    signal, taps, w, b, window=window, hop=hop,
+                    fft_size=fft_size, interpret=interpret, block_frames=rb,
+                    outputs=outputs))
+    return pipeline_stream_pallas(signal, taps, w, b, window=window, hop=hop,
+                                  fft_size=fft_size, interpret=interpret,
+                                  block_frames=block_frames, outputs=outputs)
 
 
 def app_pipeline(app, signal, *, block_rows: int | None = None,
-                 autotune: bool = False):
-    """Fused execution of a `core.biosignal.BiosignalApp` instance."""
+                 autotune: bool = False, outputs=None):
+    """Fused execution of a `core.biosignal.BiosignalApp` instance on
+    pre-framed windows."""
     return biosignal_pipeline(signal, app.fir_taps, app.svm_w, app.svm_b,
                               fft_size=app.fft_size, block_rows=block_rows,
-                              autotune=autotune)
+                              autotune=autotune, outputs=outputs)
+
+
+def app_pipeline_stream(app, signal, *, window: int, hop: int,
+                        block_frames: int | None = None,
+                        autotune: bool = False, outputs=None):
+    """Fused raw-signal streaming execution of a `BiosignalApp`."""
+    return biosignal_pipeline_stream(signal, app.fir_taps, app.svm_w,
+                                     app.svm_b, window=window, hop=hop,
+                                     fft_size=app.fft_size,
+                                     block_frames=block_frames,
+                                     autotune=autotune, outputs=outputs)

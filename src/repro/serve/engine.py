@@ -46,44 +46,81 @@ class Engine:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _length_bucket(self, n: int) -> int:
+        """Pad prompt lengths up to the next power of two so bursty mixed-
+        length traffic funnels into a handful of prefill trace shapes —
+        capped at max_len: the cache has no rows past it, and a valid
+        prompt of length <= max_len must not be padded beyond it."""
+        return min(1 << max(n - 1, 0).bit_length(), self.max_len)
+
     def _admit(self):
+        # claim every free slot first, then admit them in as few prefill
+        # dispatches as possible (one per prompt-length bucket) — under
+        # bursty load the seed's request-at-a-time admission paid one
+        # dispatch per request
+        admitted = []
         for s in range(self.slots):
             if self.live[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.live[s] = req
-                if getattr(self.model.cfg, "is_encdec", False):
-                    # enc-dec decoders have no engine-supplied encoder
-                    # frames: prefill mode would run _encode, so keep the
-                    # token-at-a-time decode-mode admission for them
-                    for t, tok in enumerate(req.prompt):
-                        batch = {"tokens": jnp.full((self.slots, 1), tok,
-                                                    jnp.int32),
-                                 "cache_len": jnp.asarray(t, jnp.int32)}
-                        _, cache = self._decode(self.params, batch,
-                                                self.cache)
-                        self.cache = self._merge_slot(cache, s)
-                else:
-                    # batched prefill: the whole prompt in ONE call — K/V
-                    # for positions [0:P) written together; the cache merge
-                    # keeps only slot s's rows (identical semantics to the
-                    # token-at-a-time loop, one dispatch instead of P)
-                    tokens = jnp.broadcast_to(
-                        jnp.asarray(req.prompt, jnp.int32)[None, :],
-                        (self.slots, len(req.prompt)))
-                    _, cache = self._prefill(self.params, {"tokens": tokens},
-                                             self.cache)
-                    self.cache = self._merge_slot(cache, s)
+                admitted.append((s, req))
+        if not admitted:
+            return
+        if getattr(self.model.cfg, "is_encdec", False):
+            # enc-dec decoders have no engine-supplied encoder frames:
+            # prefill mode would run _encode, so keep the token-at-a-time
+            # decode-mode admission for them
+            for s, req in admitted:
+                for t, tok in enumerate(req.prompt):
+                    batch = {"tokens": jnp.full((self.slots, 1), tok,
+                                                jnp.int32),
+                             "cache_len": jnp.asarray(t, jnp.int32)}
+                    _, cache = self._decode(self.params, batch, self.cache)
+                    self.cache = self._merge_slots(cache, [s])
+                self.lens[s] = len(req.prompt)
+            return
+        # Right-padding a prompt is safe for LINEAR causal-attention
+        # caches (pad positions only write K/V beyond the prompt, which
+        # decode masks via cache_len and overwrites before it becomes
+        # visible), but NOT for recurrent state (every consumed token
+        # mutates it) nor for sliding-window RING caches (the kept k[-W:]
+        # tail and the slot rotation are computed from the padded length,
+        # so pad keys evict real prompt keys) — those bucket by exact
+        # length instead.
+        cfg = self.model.cfg
+        pad_ok = (getattr(cfg, "ssm", None) is None and
+                  getattr(cfg, "sliding_window", None) is None)
+        buckets: dict[int, list] = {}
+        for s, req in admitted:
+            n = len(req.prompt)
+            buckets.setdefault(self._length_bucket(n) if pad_ok else n,
+                               []).append((s, req))
+        for width, group in sorted(buckets.items()):
+            # one padded prefill for the whole bucket: every admitted
+            # slot's prompt K/V written in a single dispatch; the cache
+            # merge keeps only the group's rows (identical semantics to
+            # per-request admission, len(group)x fewer dispatches)
+            tokens = np.zeros((self.slots, width), np.int32)
+            for s, req in group:
+                tokens[s, : len(req.prompt)] = req.prompt
+            _, cache = self._prefill(self.params,
+                                     {"tokens": jnp.asarray(tokens)},
+                                     self.cache)
+            self.cache = self._merge_slots(cache, [s for s, _ in group])
+            for s, req in group:
                 self.lens[s] = len(req.prompt)
 
-    def _merge_slot(self, new_cache, slot):
-        # single-sequence admission updates every slot's cache row; keep
-        # only `slot`'s row from the new cache
+    def _merge_slots(self, new_cache, slots: list):
+        # admission updates every slot's cache row; keep only the admitted
+        # `slots` rows from the new cache
+        idx = np.asarray(slots)
+
         def merge(old, new):
             if old.ndim >= 1 and old.shape[0] == self.slots:
-                return old.at[slot].set(new[slot])
+                return old.at[idx].set(new[idx])
             # stacked-layer leading dim: slot axis is axis 1
             if old.ndim >= 2 and old.shape[1] == self.slots:
-                return old.at[:, slot].set(new[:, slot])
+                return old.at[:, idx].set(new[:, idx])
             return new
         return jax.tree.map(merge, self.cache, new_cache)
 

@@ -2,14 +2,18 @@
 pipeline kernel.
 
 The paper's deployment model (§4.4.2) is a sensor feeding windows to the
-accelerator forever; ours is the serving analogue: a continuous signal is
-framed into overlapping (window, hop) frames, frames are grouped into
-fixed-size window batches, and each batch runs through the fused
-single-`pallas_call` pipeline (`kernels/pipeline`). Dispatch is
-double-buffered: while batch k's outputs are being consumed on the host,
-batch k+1 is already in flight (JAX async dispatch is the host-side
-ping-pong buffer, mirroring the SPM's double-buffered line fills). The
-row-block of the fused kernel can be autotuned from measured candidates
+accelerator forever; ours is the serving analogue. The default feed is
+ZERO-COPY: the runtime hands the kernel contiguous RAW signal chunks and the
+kernel builds the overlapping (window, hop) frames in VMEM itself
+(`kernels/pipeline.pipeline_stream_pallas`) — no host gather, no duplicated
+overlap bytes in HBM, no materialized zero-padding frames for the tail
+batch. The pre-framed path (`framing="host"`) is kept as the fallback and
+cross-check reference. Dispatch is double-buffered either way: while batch
+k's outputs are being consumed on the host, batch k+1 is already in flight
+(JAX async dispatch is the host-side ping-pong buffer, mirroring the SPM's
+double-buffered line fills). An ``outputs`` selection drops unrequested HBM
+writes — classification-only traffic never writes filtered windows — and
+the kernel row-block can be autotuned from measured candidates
 (`core/autotune.py`) instead of the static VWRSpec formula.
 """
 from __future__ import annotations
@@ -22,7 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.biosignal import BiosignalApp, make_app
-from repro.kernels.pipeline.ops import app_pipeline
+from repro.kernels.pipeline.kernel import empty_outputs
+from repro.kernels.pipeline.ops import (OUTPUTS, app_pipeline,
+                                        app_pipeline_stream,
+                                        canonical_outputs,
+                                        stream_frame_count)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,16 +40,22 @@ class StreamConfig:
     batch_windows: int = 8      # frames per fused-kernel dispatch
     autotune: bool = False      # measure the kernel row-block (cached)
     block_rows: int | None = None   # pin the row-block explicitly
+    outputs: tuple = OUTPUTS    # which app outputs to compute/write
+    framing: str = "kernel"     # "kernel": raw chunks, frames built in VMEM
+    #                             "host": gather-framed fallback/reference
 
 
-def frame_count(n_samples: int, window: int, hop: int) -> int:
-    if n_samples < window:
-        return 0
-    return 1 + (n_samples - window) // hop
+# single source of the framing arithmetic (shared with the kernel, whose
+# trim logic depends on the same count)
+frame_count = stream_frame_count
 
 
 def frame_signal(signal, window: int, hop: int):
-    """(S,) continuous signal -> (n_frames, window) overlapping frames."""
+    """(S,) continuous signal -> (n_frames, window) overlapping frames.
+
+    Host-side gather: every sample is duplicated ~window/hop times. Kept
+    for the `framing="host"` fallback and as the reference the raw-chunk
+    kernel path is tested against."""
     sig = jnp.asarray(signal)
     assert sig.ndim == 1, sig.shape
     n = frame_count(sig.shape[0], window, hop)
@@ -62,34 +76,71 @@ class BiosignalStream:
     def __init__(self, app: BiosignalApp | None = None,
                  cfg: StreamConfig | None = None):
         self.app = app or make_app()
-        self.cfg = cfg or StreamConfig()
+        cfg = cfg or StreamConfig()
+        self.cfg = dataclasses.replace(
+            cfg, outputs=canonical_outputs(cfg.outputs))
         assert self.cfg.window >= self.app.fft_size, (
             self.cfg.window, self.app.fft_size)
         assert 0 < self.cfg.hop <= self.cfg.window
         assert self.cfg.batch_windows > 0
+        assert self.cfg.framing in ("kernel", "host"), self.cfg.framing
 
-    def _dispatch(self, frames):
+    @property
+    def chunk_samples(self) -> int:
+        """Raw samples per kernel-framed dispatch: one batch's span."""
+        cfg = self.cfg
+        return (cfg.batch_windows - 1) * cfg.hop + cfg.window
+
+    def _dispatch_chunk(self, chunk):
+        """Raw-chunk dispatch: the kernel does the framing in VMEM."""
+        cfg = self.cfg
+        return app_pipeline_stream(self.app, chunk, window=cfg.window,
+                                   hop=cfg.hop, block_frames=cfg.block_rows,
+                                   autotune=cfg.autotune,
+                                   outputs=cfg.outputs)
+
+    def _dispatch_frames(self, frames):
+        """Pre-framed dispatch (fallback/reference path)."""
         return app_pipeline(self.app, frames,
                             block_rows=self.cfg.block_rows,
-                            autotune=self.cfg.autotune)
+                            autotune=self.cfg.autotune,
+                            outputs=self.cfg.outputs)
+
+    def _batches(self, signal) -> Iterator[tuple]:
+        """(in-flight output dict, n valid frames) per window batch."""
+        cfg = self.cfg
+        sig = jnp.asarray(signal)
+        n = frame_count(sig.shape[0], cfg.window, cfg.hop)
+        bw = cfg.batch_windows
+        if cfg.framing == "host":
+            frames = frame_signal(sig, cfg.window, cfg.hop)
+            for start in range(0, n, bw):
+                batch = frames[start: start + bw]
+                valid = batch.shape[0]
+                if valid < bw:      # pad the tail batch to the fixed shape
+                    batch = jnp.concatenate(
+                        [batch, jnp.zeros((bw - valid, cfg.window),
+                                          batch.dtype)], axis=0)
+                yield self._dispatch_frames(batch), valid
+            return
+        # raw-chunk feed: batch k's frames live in one contiguous slice of
+        # the signal — no gather, and the tail batch pads with at most
+        # chunk_samples raw zeros instead of bw-valid whole zero frames
+        span = self.chunk_samples
+        for start in range(0, n, bw):
+            s0 = start * cfg.hop
+            chunk = sig[s0: s0 + span]
+            if chunk.shape[0] < span:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((span - chunk.shape[0],), sig.dtype)])
+            yield self._dispatch_chunk(chunk), min(bw, n - start)
 
     def stream(self, signal) -> Iterator[dict]:
         """Yields one output dict per window batch (trimmed to the real
         frames). Batch k+1 is dispatched before batch k is yielded, so the
         consumer always overlaps with one in-flight batch."""
-        cfg = self.cfg
-        frames = frame_signal(signal, cfg.window, cfg.hop)
-        n = frames.shape[0]
-        bw = cfg.batch_windows
         inflight: tuple[dict, int] | None = None
-        for start in range(0, n, bw):
-            batch = frames[start: start + bw]
-            valid = batch.shape[0]
-            if valid < bw:      # pad the tail batch to the fixed shape
-                batch = jnp.concatenate(
-                    [batch, jnp.zeros((bw - valid, cfg.window),
-                                      batch.dtype)], axis=0)
-            nxt = (self._dispatch(batch), valid)    # async: in flight now
+        for nxt in self._batches(signal):       # async: in flight now
             if inflight is not None:
                 yield self._collect(*inflight)
             inflight = nxt
@@ -101,15 +152,17 @@ class BiosignalStream:
         out = jax.block_until_ready(out)
         return {k: v[:valid] for k, v in out.items()}
 
+    def _empty(self, dtype) -> dict:
+        """Zero-frame result: same keys/shapes/dtypes as the kernel path."""
+        w = self.app.svm_w.shape
+        return empty_outputs(self.cfg.window, w[0], w[1], dtype,
+                             self.cfg.outputs)
+
     def process(self, signal) -> dict:
         """One-call convenience: all framed outputs concatenated, equal to
         running the app on `frame_signal(signal, window, hop)` at once."""
         chunks = list(self.stream(signal))
         if not chunks:
-            w = self.app.svm_w.shape
-            return {"filtered": jnp.zeros((0, self.cfg.window)),
-                    "features": jnp.zeros((0, w[0])),
-                    "margin": jnp.zeros((0, w[1])),
-                    "class": jnp.zeros((0,), jnp.int32)}
+            return self._empty(jnp.asarray(signal).dtype)
         return {k: jnp.concatenate([c[k] for c in chunks], axis=0)
                 for k in chunks[0]}

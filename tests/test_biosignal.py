@@ -58,3 +58,95 @@ def test_full_app_jit():
     out = jax.jit(app.__call__)(sig)
     assert out["class"].shape == (4,)
     assert bool(jnp.isfinite(out["margin"]).all())
+
+
+def test_delineate_refractory_spacing():
+    """The refractory gate: consecutive extrema sit > min_distance apart,
+    so noise ripple near a breath peak yields ONE extremum — this spacing
+    is also what keeps the interval median on its fixed-size network."""
+    sig, _ = synthetic_respiration(8, 2048, seed=1)
+    filtered = fir_direct(sig, jnp.asarray(lowpass_taps(11)))
+    for mask in delineate(filtered):
+        for row in np.asarray(mask):
+            pos = np.flatnonzero(row)
+            if len(pos) > 1:
+                assert np.diff(pos).min() > 15, np.diff(pos).min()
+
+
+def test_network_sort_matches_np_sort():
+    """Batcher odd-even merge network == np.sort for every power of two,
+    both the table-driven and the arithmetic (in-kernel fallback) forms."""
+    from repro.core.biosignal import _network_sort_arith, network_sort
+
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 4, 16, 128, 512):
+        x = rng.integers(-1000, 1000, size=(5, n)).astype(np.int32)
+        want = np.sort(x, axis=-1)
+        got = np.asarray(jax.jit(network_sort)(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, want)
+        got2 = np.asarray(jax.jit(_network_sort_arith)(jnp.asarray(x)))
+        np.testing.assert_array_equal(got2, want)
+
+
+def test_masked_intervals_matches_sort_reference():
+    """Ref-equivalence of the sorting-network masked-median against the
+    seed's sort/take_along_axis path, across densities that exercise BOTH
+    the fixed-size fast path and the full-length fallback (plus empty,
+    single-extremum, and all-True masks)."""
+    from repro.core.biosignal import _masked_intervals, _masked_intervals_sort
+
+    rng = np.random.default_rng(7)
+    cases = []
+    for S in (7, 64, 300, 2048):
+        dense = rng.random((4, S)) < 0.4          # collisions -> fallback
+        sparse = np.zeros((4, S), bool)           # fits the 128-slot buffer
+        pos = np.unique(rng.integers(0, S, size=max(S // 64, 1)))
+        sparse[:, pos] = True
+        corner = np.zeros((3, S), bool)
+        corner[1, S // 2] = True                  # single extremum: no gaps
+        corner[2] = True                          # pathological all-True
+        cases += [dense, sparse, corner]
+    for m in cases:
+        got = [np.asarray(v) for v in _masked_intervals(jnp.asarray(m))]
+        want = [np.asarray(v) for v in _masked_intervals_sort(jnp.asarray(m))]
+        for g, w, name in zip(got, want, ("mean", "median", "rms")):
+            np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+def test_masked_intervals_sparse2_matches_sort_reference():
+    """The sparse2=True pre-fold — the path `interval_time_features`
+    actually runs — must match the seed sort reference both when the
+    caller's no-adjacent-Trues promise holds AND when it is violated
+    (adjacent Trues trip the guard onto the exact full-length network)."""
+    from repro.core.biosignal import _masked_intervals, _masked_intervals_sort
+
+    rng = np.random.default_rng(11)
+    for S in (64, 512, 2048):
+        honest = np.zeros((4, S), bool)      # >=2-apart, promise holds
+        pos = np.sort(rng.choice(S // 2, size=S // 40 + 1,
+                                 replace=False)) * 2
+        honest[:, pos] = True
+        broken = honest.copy()               # adjacent pair: promise broken
+        broken[:, S // 2] = broken[:, S // 2 + 1] = True
+        dense = rng.random((4, S)) < 0.5     # many adjacent pairs
+        for m in (honest, broken, dense):
+            got = [np.asarray(v) for v in
+                   _masked_intervals(jnp.asarray(m), sparse2=True)]
+            want = [np.asarray(v) for v in
+                    _masked_intervals_sort(jnp.asarray(m))]
+            for g, w, name in zip(got, want, ("mean", "median", "rms")):
+                np.testing.assert_array_equal(g, w, err_msg=(S, name))
+
+
+def test_interval_features_no_sort_primitives():
+    """Acceptance: the delineation/median stage must not lower to XLA
+    `sort` or gather (`take_along_axis`) — the Mosaic-compile gap."""
+    from repro.core.biosignal import interval_time_features
+
+    def run(mask):
+        return tuple(interval_time_features(mask, jnp.roll(mask, 5, -1)))
+
+    m = jnp.asarray(np.random.default_rng(0).random((4, 2048)) < 0.01)
+    hlo = jax.jit(run).lower(m).as_text()
+    assert " sort(" not in hlo and " gather(" not in hlo, (
+        "sort/gather leaked into the interval feature stage")

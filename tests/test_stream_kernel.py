@@ -1,0 +1,209 @@
+"""Raw-signal single-residency streaming: the in-kernel-framing pipeline
+must match the host-framed fused kernel to f32 tolerance on every
+(window, hop) combination (including non-dividing tails), keep the
+one-`pallas_call`-per-batch contract, honour the `outputs` selection, and
+the streaming runtime's degenerate paths must return the same keys/dtypes
+as the non-empty path."""
+import numpy as np
+import pytest
+
+from repro.core.biosignal import make_app, synthetic_respiration
+from repro.kernels.pipeline.kernel import (min_stream_block_frames,
+                                           resolve_stream_block_frames)
+from repro.kernels.pipeline.ops import (app_pipeline, app_pipeline_stream,
+                                        canonical_outputs)
+from repro.serve.stream import (BiosignalStream, StreamConfig, frame_count,
+                                frame_signal)
+
+
+def _assert_matches(out, ref, tol=1e-4, keys=("filtered", "features",
+                                              "margin")):
+    for k in keys:
+        a = np.asarray(ref[k], np.float64)
+        b = np.asarray(out[k], np.float64)
+        assert a.shape == b.shape, (k, a.shape, b.shape)
+        if a.size == 0:
+            continue
+        scale = max(1.0, float(np.abs(a).max()))
+        assert float(np.abs(a - b).max()) / scale < tol, k
+    np.testing.assert_array_equal(np.asarray(out["class"]),
+                                  np.asarray(ref["class"]))
+
+
+@pytest.mark.parametrize("window,hop,n_samples", [
+    (512, 128, 5000),        # deep overlap
+    (512, 512, 3000),        # hop == window (no overlap, no tail specs)
+    (1024, 320, 7001),       # hop does not divide window
+    (2048, 512, 2048 * 4 + 777),   # the paper-default shape, ragged tail
+    (2048, 512, 2048),       # exactly one frame
+])
+def test_stream_matches_framed(window, hop, n_samples):
+    app = make_app()
+    sig, _ = synthetic_respiration(1, n_samples, seed=window + hop)
+    raw = sig[0]
+    out = app_pipeline_stream(app, raw, window=window, hop=hop)
+    ref = app_pipeline(app, frame_signal(raw, window, hop))
+    assert out["class"].shape == (frame_count(n_samples, window, hop),)
+    _assert_matches(out, ref)
+
+
+@pytest.mark.parametrize("block_frames", [None, 4, 8, 32])
+def test_stream_block_frames_tile_without_seams(block_frames):
+    """Any frame-block choice (dividing the frame count or not) must give
+    the same answer — padded garbage frames are trimmed."""
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 512 * 22 + 13, seed=7)
+    raw = sig[0]
+    out = app_pipeline_stream(app, raw, window=512, hop=256,
+                              block_frames=block_frames)
+    ref = app_pipeline(app, frame_signal(raw, 512, 256))
+    _assert_matches(out, ref)
+
+
+def test_stream_outputs_masking():
+    """`outputs` returns exactly the requested keys; values match the
+    full run; the filtered HBM write is genuinely elided."""
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 6000, seed=9)
+    raw = sig[0]
+    full = app_pipeline_stream(app, raw, window=512, hop=128)
+    sub = app_pipeline_stream(app, raw, window=512, hop=128,
+                              outputs=("features", "class"))
+    assert sorted(sub) == ["class", "features"]
+    np.testing.assert_array_equal(np.asarray(sub["features"]),
+                                  np.asarray(full["features"]))
+    np.testing.assert_array_equal(np.asarray(sub["class"]),
+                                  np.asarray(full["class"]))
+    # framed path shares the selection machinery
+    framed = app_pipeline(app, frame_signal(raw, 512, 128),
+                          outputs=("margin",))
+    assert sorted(framed) == ["margin"]
+    np.testing.assert_allclose(np.asarray(framed["margin"]),
+                               np.asarray(full["margin"]), atol=1e-4)
+
+
+def test_canonical_outputs_validation():
+    assert canonical_outputs(None) == ("filtered", "features", "margin",
+                                       "class")
+    assert canonical_outputs(("class", "filtered")) == ("filtered", "class")
+    with pytest.raises(AssertionError):
+        canonical_outputs(("bogus",))
+    with pytest.raises(AssertionError):
+        canonical_outputs(())
+
+
+def test_stream_single_pallas_call_per_batch(monkeypatch):
+    """The raw-chunk runtime keeps the one-pallas_call-per-batch contract:
+    a signal spanning 3 batches traces exactly one call (jit reuses it)."""
+    import repro.kernels.pipeline.kernel as K
+
+    calls = []
+    real = K.pl.pallas_call
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(K.pl, "pallas_call", counting)
+    app = make_app()
+    # unique shape so the jit cache cannot satisfy the call without tracing
+    sig, _ = synthetic_respiration(1, 512 * 11 + 31, seed=23)
+    cfg = StreamConfig(window=512, hop=256, batch_windows=8)
+    out = BiosignalStream(app, cfg).process(sig[0])
+    n = frame_count(512 * 11 + 31, 512, 256)
+    assert out["class"].shape == (n,)
+    assert len(calls) == 1, f"expected 1 traced pallas_call, got {len(calls)}"
+
+
+def test_stream_runtime_kernel_matches_host_framing():
+    """framing="kernel" (raw chunks) == framing="host" (gather fallback),
+    with the frame count deliberately not a multiple of batch_windows."""
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 1024 * 5 + 333, seed=19)
+    raw = sig[0]
+    outs = []
+    for framing in ("kernel", "host"):
+        cfg = StreamConfig(window=1024, hop=320, batch_windows=4,
+                           framing=framing)
+        outs.append(BiosignalStream(app, cfg).process(raw))
+    _assert_matches(outs[0], outs[1])
+
+
+@pytest.mark.parametrize("outputs", [None, ("features", "class"),
+                                     ("margin",)])
+@pytest.mark.parametrize("window,hop,n_samples", [
+    (2048, 512, 100),       # n_samples < window -> zero frames
+    (512, 512, 511),        # zero frames at hop == window
+    (512, 512, 1536),       # hop == window, exact tiling
+    (512, 256, 1400),       # tail-batch padding
+])
+def test_stream_degenerate_and_tail_shapes(window, hop, n_samples, outputs):
+    """Property-style sweep: for every (window, hop, outputs) combo the
+    runtime returns the same key set, dtypes and trailing shapes whether
+    or not any frame (or any full batch) exists."""
+    app = make_app()
+    sig, _ = synthetic_respiration(1, max(n_samples, 1), seed=3)
+    raw = sig[0][:n_samples]
+    cfg = StreamConfig(window=window, hop=hop, batch_windows=4,
+                       outputs=canonical_outputs(outputs))
+    out = BiosignalStream(app, cfg).process(raw)
+    n = frame_count(n_samples, window, hop)
+    assert sorted(out) == sorted(canonical_outputs(outputs))
+    expect_dtype = {"filtered": np.float32, "features": np.float32,
+                    "margin": np.float32, "class": np.int32}
+    expect_trail = {"filtered": (window,), "features": (12,),
+                    "margin": (app.svm_w.shape[1],), "class": ()}
+    for k, v in out.items():
+        assert v.shape == (n,) + expect_trail[k], (k, v.shape)
+        assert v.dtype == expect_dtype[k], (k, v.dtype)
+    if n:
+        ref = app_pipeline(app, frame_signal(raw, window, hop))
+        for k in out:
+            if k == "class":
+                np.testing.assert_array_equal(np.asarray(out[k]),
+                                              np.asarray(ref[k]))
+            else:
+                np.testing.assert_allclose(np.asarray(out[k]),
+                                           np.asarray(ref[k]), atol=1e-3)
+
+
+def test_stream_block_frame_resolution():
+    """The frame-block never drops below the tail-coverage floor, no
+    matter what the caller pins."""
+    assert min_stream_block_frames(2048, 512) == 3
+    assert min_stream_block_frames(512, 512) == 1
+    assert min_stream_block_frames(1024, 320) == 3
+    assert resolve_stream_block_frames(1, 2048, 512, None) >= 3
+    assert resolve_stream_block_frames(100, 2048, 512, 1) >= 3
+    assert resolve_stream_block_frames(100, 512, 512, 1) == 1
+
+
+def test_stream_autotune_key_and_persistence(tmp_path):
+    """Autotuned stream dispatch caches under the (window, hop, outputs)
+    key shape and the winners survive a JSON round trip."""
+    from repro.core import autotune
+
+    autotune.clear_cache()
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 512 * 9, seed=5)
+    raw = sig[0]
+    out = app_pipeline_stream(app, raw, window=512, hop=128, autotune=True,
+                              outputs=("features", "class"))
+    ref = app_pipeline(app, frame_signal(raw, 512, 128))
+    np.testing.assert_allclose(np.asarray(out["features"]),
+                               np.asarray(ref["features"]), atol=1e-3)
+    cache = autotune.cache_snapshot()
+    (key, rb), = cache.items()
+    assert key[0] == "biosignal_pipeline_stream"
+    assert key[2:5] == (512, 128, ("features", "class"))
+    assert rb in autotune.candidate_stream_block_frames(key[1], 512, 128)
+    # second call hits the cache; JSON round trip preserves the winners
+    app_pipeline_stream(app, raw, window=512, hop=128, autotune=True,
+                        outputs=("features", "class"))
+    assert autotune.cache_snapshot() == cache
+    path = str(tmp_path / "autotune.json")
+    assert autotune.save_cache(path) == 1
+    autotune.clear_cache()
+    assert autotune.load_cache(path) == 1
+    assert autotune.cache_snapshot() == cache
+    assert autotune.load_cache(str(tmp_path / "missing.json")) == 0

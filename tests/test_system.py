@@ -105,6 +105,50 @@ def test_engine_temperature_sampling(tiny_setup):
     assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)
 
 
+def test_engine_bucketed_batch_admission(tiny_setup):
+    """Bursty mixed-length admission runs ONE padded prefill per prompt-
+    length bucket (not one per request), and the merge semantics are
+    unchanged: every request's greedy continuation equals argmax over
+    model.forward on its own sequence."""
+    cfg, model, mesh, dc, oc, bundle = tiny_setup
+    from repro.models import init_model_params
+
+    params = init_model_params(model, seed=2)
+    prompts = [[3, 1], [7, 2], [4, 1, 5], [9, 2, 6, 5, 3]]
+    eng = Engine(model, params, slots=4, max_len=64)
+    prefill_calls = []
+    real_prefill = eng._prefill
+    eng._prefill = lambda *a, **kw: (prefill_calls.append(
+        a[1]["tokens"].shape), real_prefill(*a, **kw))[1]
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid, p, max_new=3))
+    done = {r.rid: r.out for r in eng.run_to_completion()}
+    # buckets: len 2 (x2 requests), len 3 -> 4, len 5 -> 8; all admitted in
+    # the first step => exactly 3 prefill dispatches for 4 requests
+    assert len(prefill_calls) == 3, prefill_calls
+    assert sorted(w for _, w in prefill_calls) == [2, 4, 8], prefill_calls
+    for rid, prompt in enumerate(prompts):
+        seq = list(prompt)
+        for _ in range(3):
+            logits, _ = model.forward(params, {
+                "tokens": jnp.asarray([seq], jnp.int32)})
+            seq.append(int(jnp.argmax(logits[0, -1])))
+        assert done[rid] == seq[len(prompt):], rid
+
+
+def test_engine_admission_bucket_capped_at_max_len(tiny_setup):
+    """A prompt whose next-pow2 bucket exceeds max_len must still admit
+    (the bucket is capped at the cache length)."""
+    cfg, model, mesh, dc, oc, bundle = tiny_setup
+    from repro.models import init_model_params
+
+    params = init_model_params(model)
+    eng = Engine(model, params, slots=2, max_len=12)
+    eng.submit(Request(0, list(range(1, 10)), max_new=2))   # len 9 -> 16>12
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].out) == 2
+
+
 @pytest.mark.slow
 def test_engine_matches_batch_decode(tiny_setup):
     """Engine greedy decode == argmax over model.forward continuation."""
