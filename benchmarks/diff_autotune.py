@@ -1,4 +1,5 @@
-"""Diff two autotune-winner artifacts (BENCH_autotune.json) across commits.
+"""Diff two autotune artifacts (BENCH_autotune.json) across commits, and
+GATE the pinned-shape perf records.
 
 CI's bench smoke writes the measured block-size winners next to the
 BENCH_*.json perf records; this tool compares the current commit's winners
@@ -6,15 +7,34 @@ against the previous run's artifact and prints added / removed / changed
 entries, so a perf regression that traces back to a different measured
 block choice is visible in the job log.
 
-Usage:  python -m benchmarks.diff_autotune OLD.json NEW.json [--strict]
+``--gate`` promotes the diff from informational to a failure on the PINNED
+shapes: entries `core.autotune.record_pinned` wrote from the bench run's
+own paired reps (table5's stream/pipeline headline shapes). A pinned shape
+fails when its runner-normalized metric regresses beyond a variance
+threshold derived from the two runs' own rep spreads:
 
-Exit status is 0 unless ``--strict`` is given and winners changed —
-winner drift on shared CI runners is expected noise, not a failure.
+* only entries carrying a paired ``ratio`` in BOTH runs (fused-vs-baseline
+  speedup, measured ALTERNATELY in one rep loop) are gated — absolute wall
+  times are not comparable across heterogeneous CI runners, a same-run
+  paired ratio is;
+* ratio-less or mixed records are reported informationally, never failed
+  (gating raw us across different runner hardware would flap).
+
+Raw winner drift (a different measured block choice) stays informational
+even under ``--gate`` — on shared runners near-tied candidates flip on
+machine noise; the gate fires only when the pinned perf actually moved.
+
+Usage:  python -m benchmarks.diff_autotune OLD.json NEW.json [--strict|--gate]
 """
 from __future__ import annotations
 
 import argparse
 import json
+
+# tolerance floor: rep spread on a quiet machine is a few %, but CI
+# neighbours can inflate it — never gate tighter than this
+RATIO_FLOOR = 0.10
+SPREAD_MULT = 3.0
 
 
 def _load(path: str) -> dict:
@@ -22,6 +42,11 @@ def _load(path: str) -> dict:
         data = json.load(f)
     return {json.dumps(e["key"]): int(e["block_rows"])
             for e in data.get("autotune_winners", [])}
+
+
+def _load_pinned(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f).get("pinned", {})
 
 
 def diff(old: dict, new: dict) -> list[str]:
@@ -36,22 +61,66 @@ def diff(old: dict, new: dict) -> list[str]:
     return lines
 
 
+def gate_pinned(old: dict, new: dict) -> tuple[list[str], list[str]]:
+    """Compare pinned perf records; returns (report, failures)."""
+    report, failures = [], []
+    for name in sorted(old.keys() & new.keys()):
+        o, n = old[name], new[name]
+        spread = max(o.get("spread", 0.0), n.get("spread", 0.0))
+        if "ratio" in o and "ratio" in n:
+            tol = max(RATIO_FLOOR, SPREAD_MULT * spread)
+            drop = 1.0 - n["ratio"] / max(o["ratio"], 1e-9)
+            line = (f"{name}: paired ratio {o['ratio']:.2f}x -> "
+                    f"{n['ratio']:.2f}x (tol {tol:.0%}, rep spread "
+                    f"{spread:.0%})")
+            if drop > tol:
+                failures.append(f"{line}  REGRESSED {drop:.0%}")
+            else:
+                report.append(f"{line}  ok")
+        else:
+            # no paired ratio on one side: raw us across (possibly
+            # different) runner hardware is not gateable — report only
+            report.append(f"{name}: {o['us']:.1f}us -> {n['us']:.1f}us "
+                          f"(no paired ratio; informational)")
+    for name in sorted(new.keys() - old.keys()):
+        report.append(f"{name}: new pinned shape (no previous record)")
+    for name in sorted(old.keys() - new.keys()):
+        failures.append(f"{name}: pinned record DISAPPEARED — the bench "
+                        f"no longer measures this shape")
+    return report, failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("old")
     ap.add_argument("new")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero when any winner changed")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on pinned-shape perf regressions beyond the "
+                         "paired-rep variance threshold (winner drift "
+                         "alone stays informational)")
     args = ap.parse_args()
     old, new = _load(args.old), _load(args.new)
     lines = diff(old, new)
     if not lines:
         print(f"autotune winners unchanged ({len(new)} entries)")
-        return
-    print(f"autotune winners changed ({len(old)} -> {len(new)} entries):")
-    for line in lines:
-        print(" ", line)
-    if args.strict:
+    else:
+        print(f"autotune winners changed ({len(old)} -> {len(new)} entries):")
+        for line in lines:
+            print(" ", line)
+    if args.gate:
+        report, failures = gate_pinned(_load_pinned(args.old),
+                                       _load_pinned(args.new))
+        for line in report:
+            print("  pinned:", line)
+        for line in failures:
+            print("  pinned:", line)
+        if failures:
+            print(f"pinned-shape gate FAILED ({len(failures)} regression(s))")
+            raise SystemExit(1)
+        print(f"pinned-shape gate ok ({len(report)} shape(s))")
+    if lines and args.strict:
         raise SystemExit(1)
 
 

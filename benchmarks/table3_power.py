@@ -35,7 +35,6 @@ def run():
                  f"sim_mw={total_mw:.2f};paper_mw={PAPER_TOTAL_MW}"))
 
     # Fig 2: energy ratio vs the fixed-function FFT accelerator
-    from repro.archsim.programs.fft import run_fft
     accel_cycles = {512: 3523, 1024: 8007, 2048: 16490}   # real-valued FFTs
     for n, acc_cyc in accel_cycles.items():
         x = rng.normal(size=n) * 0.3

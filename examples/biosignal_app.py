@@ -51,6 +51,23 @@ dt_host = time.perf_counter() - t0
 print(f"host-framed: {n / dt_host:.0f} windows/s -> raw-chunk feed is "
       f"{dt_host / dt:.2f}x faster")
 
+print("== multi-column deal: shard the dispatch across column replicas ==")
+# the VWR2A column-replication analogue: hop-aligned raw chunks (+ the
+# window-hop overlap halo) are dealt across 4 columns — shard_map over a
+# data-axis mesh when this process has >= 4 devices (run under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 to try it on a
+# laptop), bit-identical serial column execution otherwise
+col_cfg = StreamConfig(window=2048, hop=512, batch_windows=4, n_columns=4,
+                       outputs=("features", "margin", "class"))
+col_stream = BiosignalStream(app, col_cfg)
+col_out = col_stream.process(long_sig)
+col_err = float(abs(np.asarray(col_out["margin"]) -
+                    np.asarray(out["margin"])).max())
+assert col_err < 1e-4, col_err
+col_mode = ("shard_map mesh" if col_stream.mesh is not None
+            else "serial fallback, <4 devices")
+print(f"n_columns=4 ({col_mode}): margin max|delta| = {col_err:.1e}")
+
 print("== raw-stream == host-framed staged cross-check ==")
 frames = frame_signal(long_sig, cfg.window, cfg.hop)
 ref = app(frames)
@@ -73,7 +90,7 @@ acc = float((pred == labels[32:]).mean())
 print(f"holdout accuracy: {acc:.2f} (chance 0.5)")
 
 print("== archsim cross-check: same pipeline, cycle/energy costs ==")
-from repro.archsim.energy import vwr2a_energy_uj, cpu_energy_uj
+from repro.archsim.energy import vwr2a_energy_uj
 from repro.archsim.programs.app import run_app
 
 out = run_app(np.asarray(sig[0]) * 0.5, taps, np.asarray(w), np.asarray(b))

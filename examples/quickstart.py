@@ -22,7 +22,7 @@ print("bit_reverse:", bit_reverse(a, b, half="lower"))
 print("circ shift :", circular_shift(a, b, amount=4, half="lower"))
 
 print("\n== 2. FFT on the shuffle dataflow + FIR (Pallas kernels) ==")
-from repro.kernels.fft.ops import fft, rfft
+from repro.kernels.fft.ops import rfft
 from repro.kernels.fir.ops import fir
 from repro.core.fir import lowpass_taps
 

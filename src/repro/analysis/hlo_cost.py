@@ -22,8 +22,6 @@ and checking whether any group crosses a pod boundary.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 from typing import Optional
 

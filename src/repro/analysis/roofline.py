@@ -39,7 +39,6 @@ def active_param_count(arch: str) -> int:
     from repro.configs import get_config
     from repro.models import build_model
     from repro.models.layers import P
-    import jax
 
     cfg = get_config(arch)
     model = build_model(cfg)

@@ -19,7 +19,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.archsim.isa import LCUInstr, LSUInstr, MXCUInstr, RCInstr, SlotWord
+from repro.archsim.isa import SlotWord
 
 VWR_WORDS = 128
 SPM_LINES = 64                  # 64 x 128 words x 4 B = 32 KiB

@@ -38,7 +38,6 @@ import dataclasses
 
 import numpy as np
 
-from repro.archsim.isa import SlotWord
 
 # geometry (mirrors machine.py; imported lazily there to avoid a cycle)
 VWR_WORDS = 128

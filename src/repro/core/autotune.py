@@ -24,14 +24,45 @@ from repro.core.vwr import SUBLANES
 
 # (kernel-name, shape...) -> winning block_rows
 _CACHE: dict[tuple, int] = {}
+# pinned-shape perf records: name -> {"us", "spread", ...} — the paired
+# rep measurements CI's regression gate compares across commits
+_PINNED: dict[str, dict] = {}
 
 
 def clear_cache() -> None:
     _CACHE.clear()
+    _PINNED.clear()
 
 
 def cache_snapshot() -> dict:
     return dict(_CACHE)
+
+
+def record_pinned(name: str, times_us: list, *,
+                  baseline_us: list | None = None) -> dict:
+    """Record a pinned benchmark shape's paired-rep timings for the
+    cross-commit gate (`benchmarks/diff_autotune.py --gate`).
+
+    ``times_us`` are the per-rep wall times of the pinned configuration;
+    ``baseline_us`` (optional) a PAIRED sibling timed alternately in the
+    same rep loop. The gate compares the runner-normalized ratio
+    baseline/us when a baseline exists (cross-runner absolute times are
+    not comparable; a same-run paired ratio is), with the tolerance taken
+    from the run's own rep spread. Spread is (median - min)/min — robust
+    to the occasional 5-10x GC/neighbour outlier rep that would otherwise
+    blow the gate tolerance wide open.
+    """
+    def _spread(ts):
+        ts = sorted(ts)
+        return (ts[len(ts) // 2] - ts[0]) / max(ts[0], 1e-9)
+
+    best = min(times_us)
+    rec = {"us": best, "spread": _spread(times_us), "reps": len(times_us)}
+    if baseline_us is not None:
+        rec["ratio"] = min(baseline_us) / max(best, 1e-9)
+        rec["spread"] = max(rec["spread"], _spread(baseline_us))
+    _PINNED[name] = rec
+    return rec
 
 
 def _freeze(x):
@@ -43,18 +74,23 @@ def _freeze(x):
 def save_cache(path: str) -> int:
     """Persist the winners as a JSON artifact (next to the BENCH_*.json
     perf records) so later processes warm-start instead of re-measuring
-    and CI can diff winners across commits. Returns the entry count."""
+    and CI can diff winners across commits. Pinned-shape perf records
+    (`record_pinned`) ride along for the regression gate. Returns the
+    winner entry count."""
     entries = [{"key": list(k), "block_rows": v}
                for k, v in sorted(_CACHE.items(), key=lambda kv: str(kv[0]))]
     with open(path, "w") as f:
-        json.dump({"autotune_winners": entries}, f, indent=1, default=list)
+        json.dump({"autotune_winners": entries, "pinned": dict(_PINNED)},
+                  f, indent=1, default=list)
     return len(entries)
 
 
 def load_cache(path: str) -> int:
     """Warm-start the in-process cache from a `save_cache` artifact.
-    Missing file is not an error (first run of a fresh checkout). Returns
-    the number of loaded entries."""
+    Missing file is not an error (first run of a fresh checkout). Pinned
+    perf records are deliberately NOT loaded — they must be re-measured
+    every run, or the cross-commit gate would compare an artifact against
+    a copy of itself. Returns the number of loaded winner entries."""
     if not os.path.exists(path):
         return 0
     with open(path) as f:
@@ -131,12 +167,18 @@ def candidate_stream_block_frames(n_frames: int, window: int, hop: int,
 
 def tuned_stream_block_frames(name: str, n_frames: int, window: int,
                               hop: int, outputs: tuple, dtype: str,
-                              run: Callable[[int], object]) -> int:
+                              run: Callable[[int], object],
+                              n_columns: int = 1) -> int:
     """`tuned_block_rows` for the raw-signal streaming kernel: the cache
     key carries the full (window, hop, outputs) shape — the same window
     batch tuned for classification-only traffic (no `filtered` write) may
-    legitimately pick a different block than the all-outputs variant."""
-    key = _freeze((name, n_frames, window, hop, outputs, dtype))
+    legitimately pick a different block than the all-outputs variant —
+    plus the column count when sharded (`n_columns > 1`): each column
+    stages only ~n_frames/D frames, so the right block is per-(shape, D).
+    Candidates are enumerated over the per-column frame share."""
+    key = _freeze((name, n_frames, window, hop, outputs, dtype)
+                  + ((n_columns,) if n_columns > 1 else ()))
+    per_col = -(-n_frames // n_columns)
     return autotune_block_rows(
-        key, candidate_stream_block_frames(n_frames, window, hop),
+        key, candidate_stream_block_frames(per_col, window, hop),
         lambda rb: lambda: run(rb))

@@ -20,7 +20,6 @@ becomes "large enough to amortize DMA latency, small enough to fit VMEM").
 from __future__ import annotations
 
 import dataclasses
-import math
 
 SUBLANES = 8
 LANES = 128

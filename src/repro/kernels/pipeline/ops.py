@@ -11,12 +11,16 @@ Two entry points share the in-VMEM stage chain:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
                                            pipeline_pallas,
                                            pipeline_stream_pallas,
                                            stream_frame_count)
+from repro.kernels.pipeline.shard import (pipeline_sharded,
+                                          pipeline_stream_sharded)
 
 __all__ = ["OUTPUTS", "canonical_outputs", "biosignal_pipeline",
            "biosignal_pipeline_stream", "app_pipeline",
@@ -29,7 +33,8 @@ def _interpret() -> bool:
 
 def biosignal_pipeline(signal, taps, w, b, *, fft_size: int = 512,
                        block_rows: int | None = None,
-                       autotune: bool = False, outputs=None):
+                       autotune: bool = False, outputs=None,
+                       n_columns: int = 1, mesh=None):
     """Run the full MBioTracker pipeline on (R, S) windows in ONE fused
     Pallas call. Returns the staged app's output dict restricted to
     ``outputs`` (default: all four keys).
@@ -37,37 +42,53 @@ def biosignal_pipeline(signal, taps, w, b, *, fft_size: int = 512,
     ``block_rows`` pins the per-grid-step row-block; ``autotune=True``
     instead picks it from measured candidates (cached per shape) — the
     measured replacement for the static VWRSpec budget formula.
+    ``n_columns > 1`` deals row-blocks across column replicas
+    (`shard_map` over ``mesh``'s `data` axis when available, serial
+    columns otherwise); the autotune cache key carries the column count
+    so winners are per-(shape, D).
     """
     outputs = canonical_outputs(outputs)
     interpret = _interpret()
+    run_cols = functools.partial(pipeline_sharded, n_columns=n_columns,
+                                 mesh=mesh) if n_columns > 1 else \
+        pipeline_pallas
     if autotune and block_rows is None:
         from repro.core.autotune import tuned_block_rows
 
         R, S = signal.shape
+        extras = (S, fft_size, outputs, str(signal.dtype)) + (
+            (n_columns,) if n_columns > 1 else ())
         block_rows = tuned_block_rows(
-            "biosignal_pipeline", R,
-            (S, fft_size, outputs, str(signal.dtype)),
-            lambda rb: pipeline_pallas(signal, taps, w, b, fft_size=fft_size,
-                                       interpret=interpret, block_rows=rb,
-                                       outputs=outputs))
-    return pipeline_pallas(signal, taps, w, b, fft_size=fft_size,
-                           interpret=interpret, block_rows=block_rows,
-                           outputs=outputs)
+            "biosignal_pipeline", -(-R // n_columns), extras,
+            lambda rb: run_cols(signal, taps, w, b, fft_size=fft_size,
+                                interpret=interpret, block_rows=rb,
+                                outputs=outputs))
+    return run_cols(signal, taps, w, b, fft_size=fft_size,
+                    interpret=interpret, block_rows=block_rows,
+                    outputs=outputs)
 
 
 def biosignal_pipeline_stream(signal, taps, w, b, *, window: int, hop: int,
                               fft_size: int = 512,
                               block_frames: int | None = None,
-                              autotune: bool = False, outputs=None):
+                              autotune: bool = False, outputs=None,
+                              n_columns: int = 1, mesh=None):
     """Run the pipeline over a RAW 1-D signal with in-kernel (window, hop)
     framing — the single-residency streaming path. Output equals
     ``biosignal_pipeline`` on host-framed windows, to the last bit.
 
     ``block_frames`` pins the frames-per-grid-step; ``autotune=True``
-    measures candidates, cached under the (window, hop, outputs) shape key.
+    measures candidates, cached under the (window, hop, outputs, D) shape
+    key. ``n_columns > 1`` deals hop-aligned signal chunks (+ window-hop
+    halo) across column replicas via `shard_map` over ``mesh``'s `data`
+    axis (serial columns when no mesh fits) — outputs stay equal to the
+    single-device call.
     """
     outputs = canonical_outputs(outputs)
     interpret = _interpret()
+    run_cols = functools.partial(pipeline_stream_sharded,
+                                 n_columns=n_columns, mesh=mesh) \
+        if n_columns > 1 else pipeline_stream_pallas
     if autotune and block_frames is None:
         from repro.core.autotune import tuned_stream_block_frames
 
@@ -76,30 +97,34 @@ def biosignal_pipeline_stream(signal, taps, w, b, *, window: int, hop: int,
             block_frames = tuned_stream_block_frames(
                 "biosignal_pipeline_stream", n, window, hop, outputs,
                 str(signal.dtype),
-                lambda rb: pipeline_stream_pallas(
+                lambda rb: run_cols(
                     signal, taps, w, b, window=window, hop=hop,
                     fft_size=fft_size, interpret=interpret, block_frames=rb,
-                    outputs=outputs))
-    return pipeline_stream_pallas(signal, taps, w, b, window=window, hop=hop,
-                                  fft_size=fft_size, interpret=interpret,
-                                  block_frames=block_frames, outputs=outputs)
+                    outputs=outputs), n_columns=n_columns)
+    return run_cols(signal, taps, w, b, window=window, hop=hop,
+                    fft_size=fft_size, interpret=interpret,
+                    block_frames=block_frames, outputs=outputs)
 
 
 def app_pipeline(app, signal, *, block_rows: int | None = None,
-                 autotune: bool = False, outputs=None):
+                 autotune: bool = False, outputs=None, n_columns: int = 1,
+                 mesh=None):
     """Fused execution of a `core.biosignal.BiosignalApp` instance on
     pre-framed windows."""
     return biosignal_pipeline(signal, app.fir_taps, app.svm_w, app.svm_b,
                               fft_size=app.fft_size, block_rows=block_rows,
-                              autotune=autotune, outputs=outputs)
+                              autotune=autotune, outputs=outputs,
+                              n_columns=n_columns, mesh=mesh)
 
 
 def app_pipeline_stream(app, signal, *, window: int, hop: int,
                         block_frames: int | None = None,
-                        autotune: bool = False, outputs=None):
+                        autotune: bool = False, outputs=None,
+                        n_columns: int = 1, mesh=None):
     """Fused raw-signal streaming execution of a `BiosignalApp`."""
     return biosignal_pipeline_stream(signal, app.fir_taps, app.svm_w,
                                      app.svm_b, window=window, hop=hop,
                                      fft_size=app.fft_size,
                                      block_frames=block_frames,
-                                     autotune=autotune, outputs=outputs)
+                                     autotune=autotune, outputs=outputs,
+                                     n_columns=n_columns, mesh=mesh)

@@ -1,0 +1,215 @@
+"""Multi-column sharding for the fused biosignal pipeline.
+
+VWR2A scales throughput by replicating columns: the CGRA deals passes
+round-robin across identical column slices that share the scratchpad
+crossbar, and archsim's `VWR2A(n_columns=...)` models exactly that
+(conserved activity, ~1/D cycles). This module is the Pallas-path
+analogue: a `data`-axis `shard_map` around `pipeline_pallas` /
+`pipeline_stream_pallas` that deals frame-blocks across devices the way
+the simulator deals passes across columns.
+
+The raw-signal split happens on HOP boundaries: column d owns the
+contiguous run of frames [d*n_d, (d+1)*n_d) (n_d = ceil(n_frames / D) —
+the same conserved-work deal as archsim's round-robin, collapsed to one
+run per column so the inter-column halo stays minimal), and its chunk is
+
+    signal[d*n_d*hop : d*n_d*hop + n_d*hop + (window - hop)]
+
+i.e. each column stages ~n_samples/D body samples plus ONE `window-hop`
+overlap halo replicated from its right neighbour — the inter-device
+mirror of the in-kernel overlap sharing (PR 3), which keeps per-device
+HBM traffic at ~n_samples/D instead of n_frames*window/D.
+
+Every column runs the SAME single-device kernel on its chunk, so sharded
+outputs are bit-identical to the unsharded call (each frame's pipeline
+reads only its own window: the chunk FIR's frame-local transient patch
+makes frames independent of how chunks are cut). When no mesh is
+available (or D exceeds the device count) the identical per-column body
+runs serially on one device — the fallback tests rely on for
+device-count-independent equivalence properties.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
+                                           empty_outputs, pipeline_pallas,
+                                           pipeline_stream_pallas,
+                                           stream_frame_count)
+
+__all__ = ["column_frames", "column_chunks", "pipeline_sharded",
+           "pipeline_stream_sharded", "data_mesh_size"]
+
+
+def data_mesh_size(mesh) -> int:
+    """Size of the mesh's `data` axis (the column-replication axis)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+
+
+def _check_mesh(mesh, n_columns: int) -> None:
+    """`mesh=None` means the serial fallback by design, but a PROVIDED
+    mesh whose data axis doesn't match n_columns is a misconfiguration —
+    silently running serial would hand back single-device throughput with
+    zero diagnostics."""
+    assert mesh is None or data_mesh_size(mesh) == n_columns, (
+        f"mesh data axis {data_mesh_size(mesh)} != n_columns {n_columns}; "
+        f"build the mesh with make_local_mesh(data=n_columns) or pass "
+        f"mesh=None for the serial fallback")
+
+
+def column_frames(n_frames: int, n_columns: int) -> int:
+    """Frames per column: the conserved-work deal. Every column processes
+    the same padded count (shard_map shards must agree on shape); the
+    `n_columns*column_frames - n_frames` pad frames are trimmed after."""
+    assert n_columns >= 1, n_columns
+    return -(-max(n_frames, 1) // n_columns)
+
+
+def column_chunks(signal, window: int, hop: int, n_columns: int):
+    """Split a raw 1-D signal into per-column chunks on hop boundaries.
+
+    Returns `(chunks, n_frames)` where chunks is `(D, L)` with
+    `L = n_d*hop + window - hop`: row d starts at sample `d*n_d*hop` and
+    carries its `window-hop` right-halo (replicated from the neighbour's
+    first samples), zero-padded past the signal end — so row d frames to
+    exactly `n_d` windows, the ones frame-global indices
+    [d*n_d, (d+1)*n_d) would produce. `n_frames == 0` yields (None, 0).
+    """
+    sig = jnp.asarray(signal)
+    assert sig.ndim == 1, sig.shape
+    n = stream_frame_count(sig.shape[0], window, hop)
+    if n == 0:
+        return None, 0
+    n_d = column_frames(n, n_columns)
+    L = n_d * hop + (window - hop)
+    total = (n_columns - 1) * n_d * hop + L
+    if total > sig.shape[0]:
+        sig = jnp.concatenate(
+            [sig, jnp.zeros((total - sig.shape[0],), sig.dtype)])
+    chunks = jnp.stack([sig[d * n_d * hop: d * n_d * hop + L]
+                        for d in range(n_columns)])
+    return chunks, n
+
+
+def _trim(out: dict, n: int) -> dict:
+    return {k: v[:n] for k, v in out.items()}
+
+
+def _stream_body(chunk, taps, w, b, *, window, hop, fft_size, interpret,
+                 block_frames, outputs):
+    """One column's work: the unsharded single-device kernel on a (1, L)
+    chunk row. Shared verbatim by the shard_map shard and the serial
+    fallback, which is what makes the two paths bit-identical."""
+    return pipeline_stream_pallas(
+        chunk[0], taps, w, b, window=window, hop=hop, fft_size=fft_size,
+        interpret=interpret, block_frames=block_frames, outputs=outputs)
+
+
+@functools.lru_cache(maxsize=64)
+def _stream_shard_fn(mesh, window, hop, fft_size, interpret, block_frames,
+                     outputs):
+    """Memoized jit(shard_map(...)) per (mesh, static config): an eager
+    shard_map re-traces every dispatch, which would swamp the per-batch
+    runtime; Mesh hashes by value, so every stream with the same column
+    layout shares one compiled executable."""
+    body = functools.partial(_stream_body, window=window, hop=hop,
+                             fft_size=fft_size, interpret=interpret,
+                             block_frames=block_frames, outputs=outputs)
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P("data"), P(), P(), P()),
+        out_specs=P("data"),
+        check_rep=False))         # pallas_call has no replication rule
+
+
+def pipeline_stream_sharded(signal, taps, w, b, *, window: int, hop: int,
+                            n_columns: int, mesh=None, fft_size: int = 512,
+                            interpret: bool = True,
+                            block_frames: int | None = None,
+                            outputs: tuple = OUTPUTS):
+    """`pipeline_stream_pallas` dealt across `n_columns` column replicas.
+
+    With `mesh` (a mesh whose `data` axis has >= n_columns devices... in
+    fact exactly n_columns — build it with
+    `launch.mesh.make_local_mesh(data=n_columns)`), the per-column chunks
+    are `shard_map`ped over the `data` axis: each device stages only its
+    ~n_samples/D chunk + halo and runs the fused kernel on it. Without a
+    mesh the same per-column body runs serially — identical outputs, so
+    every equivalence property is testable on a single device.
+    """
+    outputs = canonical_outputs(outputs)
+    _check_mesh(mesh, n_columns)
+    F, C = w.shape
+    chunks, n = column_chunks(signal, window, hop, n_columns)
+    if n == 0:
+        return empty_outputs(window, F, C, jnp.asarray(signal).dtype,
+                             outputs)
+    body = functools.partial(_stream_body, window=window, hop=hop,
+                             fft_size=fft_size, interpret=interpret,
+                             block_frames=block_frames, outputs=outputs)
+    if n_columns == 1:
+        return _trim(body(chunks, taps, w, b), n)
+    if mesh is not None:
+        sharded = _stream_shard_fn(mesh, window, hop, fft_size, interpret,
+                                   block_frames, outputs)
+        return _trim(sharded(chunks, taps, w, b), n)
+    # serial-column fallback: same deal, one device
+    outs = [body(chunks[d: d + 1], taps, w, b) for d in range(n_columns)]
+    return _trim({k: jnp.concatenate([o[k] for o in outs]) for k in outs[0]},
+                 n)
+
+
+def _framed_body(rows, taps, w, b, *, fft_size, interpret, block_rows,
+                 outputs):
+    return pipeline_pallas(rows, taps, w, b, fft_size=fft_size,
+                           interpret=interpret, block_rows=block_rows,
+                           outputs=outputs)
+
+
+@functools.lru_cache(maxsize=64)
+def _framed_shard_fn(mesh, fft_size, interpret, block_rows, outputs):
+    body = functools.partial(_framed_body, fft_size=fft_size,
+                             interpret=interpret, block_rows=block_rows,
+                             outputs=outputs)
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P("data"), P(), P(), P()),
+        out_specs=P("data"),
+        check_rep=False))         # pallas_call has no replication rule
+
+
+def pipeline_sharded(frames, taps, w, b, *, n_columns: int, mesh=None,
+                     fft_size: int = 512, interpret: bool = True,
+                     block_rows: int | None = None,
+                     outputs: tuple = OUTPUTS):
+    """`pipeline_pallas` on pre-framed (R, S) windows, rows dealt across
+    columns: row-block d of ceil(R/D) windows goes to column d (pad rows
+    are trimmed after). The framed counterpart of
+    `pipeline_stream_sharded` — no halo needed, frames carry their own
+    overlap."""
+    outputs = canonical_outputs(outputs)
+    _check_mesh(mesh, n_columns)
+    R, S = frames.shape
+    F, C = w.shape
+    if R == 0:
+        return empty_outputs(S, F, C, frames.dtype, outputs)
+    body = functools.partial(_framed_body, fft_size=fft_size,
+                             interpret=interpret, block_rows=block_rows,
+                             outputs=outputs)
+    if n_columns == 1:
+        return body(frames, taps, w, b)
+    r_d = column_frames(R, n_columns)
+    if n_columns * r_d > R:
+        frames = jnp.concatenate(
+            [frames, jnp.zeros((n_columns * r_d - R, S), frames.dtype)])
+    if mesh is not None:
+        sharded = _framed_shard_fn(mesh, fft_size, interpret, block_rows,
+                                   outputs)
+        return _trim(sharded(frames, taps, w, b), R)
+    outs = [body(frames[d * r_d: (d + 1) * r_d], taps, w, b)
+            for d in range(n_columns)]
+    return _trim({k: jnp.concatenate([o[k] for o in outs]) for k in outs[0]},
+                 R)

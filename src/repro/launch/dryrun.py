@@ -20,14 +20,13 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 
 from repro.analysis.hlo_cost import analyze
 from repro.configs import (SHAPES, applicable_shapes, get_config, input_specs,
                            ASSIGNED)
 from repro.launch.mesh import make_production_mesh
-from repro.models import abstract_cache, build_model
+from repro.models import build_model
 from repro.models import layers as L
 from repro.sharding.rules import Strategy
 from repro.train import optim

@@ -10,7 +10,6 @@ config; full configs are exercised via the dry-run on the production mesh.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import numpy as np

@@ -17,8 +17,7 @@ over, so all invocations reuse one copy (Zamba2 semantics).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -5,6 +5,11 @@ one token for every live slot (one jit'd decode_fn call — padding slots
 ride along). Prefill fills a slot's cache region. Greedy or temperature
 sampling. The same engine drives the serve_lm example and the serving
 integration tests.
+
+`ColumnScheduler` is the admission policy for the OTHER traffic class the
+repo serves — continuous biosignal streams: independent streams are placed
+on distinct column replicas (devices), the multi-tenant complement of
+sharding one stream across all columns (`StreamConfig.n_columns`).
 """
 from __future__ import annotations
 
@@ -171,3 +176,59 @@ class Engine:
             if not self.queue and all(r is None for r in self.live):
                 break
         return done
+
+
+class ColumnScheduler:
+    """Admission placement of independent biosignal streams onto column
+    replicas (devices).
+
+    Two ways to use D columns: one heavy stream `shard_map`s each dispatch
+    across all of them (`StreamConfig.n_columns=D`), or D independent
+    streams each stay resident on ONE column — no cross-device halo, and
+    per-column autotune winners stay valid because every column sees the
+    single-column shape. This scheduler implements the second: `admit`
+    pins a new stream to the least-loaded column (ties broken by column
+    index, so an idle machine fills round-robin — the archsim pass deal),
+    `release` frees it on stream close.
+
+    >>> sched = ColumnScheduler()
+    >>> stream = BiosignalStream(app, cfg, device=sched.admit("sensor-7"))
+    """
+
+    def __init__(self, devices=None):
+        self.devices = list(devices) if devices is not None \
+            else list(jax.devices())
+        assert self.devices, "no devices to schedule columns on"
+        self._load = [0] * len(self.devices)
+        self._placement: dict = {}
+
+    @property
+    def n_columns(self) -> int:
+        return len(self.devices)
+
+    def column_of(self, stream_id) -> int:
+        return self._placement[stream_id]
+
+    def loads(self) -> list:
+        """Live-stream count per column (admission balance introspection)."""
+        return list(self._load)
+
+    def admit(self, stream_id):
+        """Place a new stream; returns the device to pin it to
+        (`BiosignalStream(..., device=...)`)."""
+        assert stream_id not in self._placement, \
+            f"stream {stream_id!r} already placed"
+        col = min(range(len(self.devices)), key=lambda i: (self._load[i], i))
+        self._load[col] += 1
+        self._placement[stream_id] = col
+        return self.devices[col]
+
+    def release(self, stream_id) -> None:
+        self._load[self._placement.pop(stream_id)] -= 1
+
+    def open_stream(self, app=None, cfg=None, *, stream_id):
+        """Admit + construct in one call: a `BiosignalStream` whose every
+        dispatch is committed to the assigned column."""
+        from repro.serve.stream import BiosignalStream
+
+        return BiosignalStream(app, cfg, device=self.admit(stream_id))

@@ -17,9 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import abstract_cache, layers as L
-from repro.models import transformer as tfm
 from repro.sharding import ctx as shard_ctx
-from repro.sharding.rules import Strategy, sharding_tree, replicated
+from repro.sharding.rules import Strategy, sharding_tree
 from repro.train.step import batch_shardings_for
 
 

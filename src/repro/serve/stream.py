@@ -8,17 +8,32 @@ kernel builds the overlapping (window, hop) frames in VMEM itself
 (`kernels/pipeline.pipeline_stream_pallas`) — no host gather, no duplicated
 overlap bytes in HBM, no materialized zero-padding frames for the tail
 batch. The pre-framed path (`framing="host"`) is kept as the fallback and
-cross-check reference. Dispatch is double-buffered either way: while batch
-k's outputs are being consumed on the host, batch k+1 is already in flight
-(JAX async dispatch is the host-side ping-pong buffer, mirroring the SPM's
-double-buffered line fills). An ``outputs`` selection drops unrequested HBM
-writes — classification-only traffic never writes filtered windows — and
-the kernel row-block can be autotuned from measured candidates
-(`core/autotune.py`) instead of the static VWRSpec formula.
+cross-check reference. Dispatch is pipelined: while batch k's outputs are
+being consumed on the host, up to `depth` later batches are already in
+flight (JAX async dispatch is the host-side ping-pong buffer, mirroring the
+SPM's double-buffered line fills; depth=2 measured WITHIN NOISE of the
+depth=1 double buffer on the CPU interpret path — ±4% across trials, see
+table5/stream_depth* rows — so the default stays 1 and the knob is there
+for real accelerators with wider dispatch gaps). An ``outputs``
+selection drops unrequested HBM writes — classification-only traffic never
+writes filtered windows — and the kernel row-block can be autotuned from
+measured candidates (`core/autotune.py`) instead of the static VWRSpec
+formula.
+
+MULTI-COLUMN: ``n_columns > 1`` is the VWR2A column-replication analogue
+for this path (archsim deals passes round-robin across columns; we deal
+hop-aligned raw chunks across devices). Each dispatch covers
+``batch_windows`` frames PER COLUMN, `shard_map`ped over the `data` axis of
+a local mesh when the process has >= n_columns devices (on a laptop/CI box:
+run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), and
+falls back to bit-identical serial column execution otherwise. Independent
+streams can instead be pinned to distinct columns via ``device=`` — that is
+what `serve.engine.ColumnScheduler` hands out.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Iterator
 
 import jax
@@ -37,12 +52,16 @@ from repro.kernels.pipeline.ops import (OUTPUTS, app_pipeline,
 class StreamConfig:
     window: int = 2048          # samples per frame (the processing window)
     hop: int = 512              # frame stride; < window => overlapping frames
-    batch_windows: int = 8      # frames per fused-kernel dispatch
+    batch_windows: int = 8      # frames per fused-kernel dispatch PER COLUMN
     autotune: bool = False      # measure the kernel row-block (cached)
     block_rows: int | None = None   # pin the row-block explicitly
     outputs: tuple = OUTPUTS    # which app outputs to compute/write
     framing: str = "kernel"     # "kernel": raw chunks, frames built in VMEM
     #                             "host": gather-framed fallback/reference
+    n_columns: int = 1          # column replicas a dispatch is dealt across
+    depth: int = 1              # max in-flight batches (1 = classic double
+    #                             buffer, the measured CPU winner; 2+ for
+    #                             accelerators with wider dispatch gaps)
 
 
 # single source of the framing arithmetic (shared with the kernel, whose
@@ -65,16 +84,32 @@ def frame_signal(signal, window: int, hop: int):
     return sig[jnp.asarray(idx)]
 
 
+def column_mesh(n_columns: int):
+    """A `data`-axis mesh over the first n_columns local devices, or None
+    when the process doesn't have that many (the sharded entry then runs
+    its bit-identical serial-column fallback)."""
+    if n_columns <= 1 or len(jax.devices()) < n_columns:
+        return None
+    from repro.launch.mesh import make_local_mesh
+
+    return make_local_mesh(data=n_columns)
+
+
 class BiosignalStream:
     """Drives a continuous signal through the fused pipeline kernel in
-    double-buffered window batches.
+    pipelined window batches (up to `cfg.depth` in flight).
 
     >>> stream = BiosignalStream(make_app(), StreamConfig(hop=256))
     >>> out = stream.process(signal)          # dict over all frames
+
+    ``device`` pins every dispatch of THIS stream to one device (column) —
+    how the serving layer places independent streams on distinct columns —
+    and is mutually exclusive with ``cfg.n_columns > 1`` (which spreads
+    each dispatch of one stream across all columns).
     """
 
     def __init__(self, app: BiosignalApp | None = None,
-                 cfg: StreamConfig | None = None):
+                 cfg: StreamConfig | None = None, *, device=None):
         self.app = app or make_app()
         cfg = cfg or StreamConfig()
         self.cfg = dataclasses.replace(
@@ -84,34 +119,51 @@ class BiosignalStream:
         assert 0 < self.cfg.hop <= self.cfg.window
         assert self.cfg.batch_windows > 0
         assert self.cfg.framing in ("kernel", "host"), self.cfg.framing
+        assert self.cfg.n_columns >= 1
+        assert self.cfg.depth >= 1
+        assert device is None or self.cfg.n_columns == 1, \
+            "pin a stream to one column OR shard it across columns, not both"
+        self.device = device
+        self.mesh = column_mesh(self.cfg.n_columns)
+
+    @property
+    def dispatch_windows(self) -> int:
+        """Frames per dispatch across all columns."""
+        return self.cfg.batch_windows * self.cfg.n_columns
 
     @property
     def chunk_samples(self) -> int:
         """Raw samples per kernel-framed dispatch: one batch's span."""
         cfg = self.cfg
-        return (cfg.batch_windows - 1) * cfg.hop + cfg.window
+        return (self.dispatch_windows - 1) * cfg.hop + cfg.window
+
+    def _place(self, x):
+        return x if self.device is None else jax.device_put(x, self.device)
 
     def _dispatch_chunk(self, chunk):
         """Raw-chunk dispatch: the kernel does the framing in VMEM."""
         cfg = self.cfg
-        return app_pipeline_stream(self.app, chunk, window=cfg.window,
-                                   hop=cfg.hop, block_frames=cfg.block_rows,
+        return app_pipeline_stream(self.app, self._place(chunk),
+                                   window=cfg.window, hop=cfg.hop,
+                                   block_frames=cfg.block_rows,
                                    autotune=cfg.autotune,
-                                   outputs=cfg.outputs)
+                                   outputs=cfg.outputs,
+                                   n_columns=cfg.n_columns, mesh=self.mesh)
 
     def _dispatch_frames(self, frames):
         """Pre-framed dispatch (fallback/reference path)."""
-        return app_pipeline(self.app, frames,
+        return app_pipeline(self.app, self._place(frames),
                             block_rows=self.cfg.block_rows,
                             autotune=self.cfg.autotune,
-                            outputs=self.cfg.outputs)
+                            outputs=self.cfg.outputs,
+                            n_columns=self.cfg.n_columns, mesh=self.mesh)
 
     def _batches(self, signal) -> Iterator[tuple]:
         """(in-flight output dict, n valid frames) per window batch."""
         cfg = self.cfg
         sig = jnp.asarray(signal)
         n = frame_count(sig.shape[0], cfg.window, cfg.hop)
-        bw = cfg.batch_windows
+        bw = self.dispatch_windows
         if cfg.framing == "host":
             frames = frame_signal(sig, cfg.window, cfg.hop)
             for start in range(0, n, bw):
@@ -124,8 +176,9 @@ class BiosignalStream:
                 yield self._dispatch_frames(batch), valid
             return
         # raw-chunk feed: batch k's frames live in one contiguous slice of
-        # the signal — no gather, and the tail batch pads with at most
-        # chunk_samples raw zeros instead of bw-valid whole zero frames
+        # the signal — no gather, and the tail batch (frames % (bw*D) != 0)
+        # pads with at most chunk_samples raw zeros instead of bw-valid
+        # whole zero frames; the sharded entry trims the pad columns
         span = self.chunk_samples
         for start in range(0, n, bw):
             s0 = start * cfg.hop
@@ -137,15 +190,17 @@ class BiosignalStream:
 
     def stream(self, signal) -> Iterator[dict]:
         """Yields one output dict per window batch (trimmed to the real
-        frames). Batch k+1 is dispatched before batch k is yielded, so the
-        consumer always overlaps with one in-flight batch."""
-        inflight: tuple[dict, int] | None = None
+        frames). Up to `cfg.depth` later batches are dispatched before
+        batch k is yielded, so the consumer always overlaps with
+        `depth` in-flight batches (depth=1 is the classic double buffer:
+        consume k while k+1 runs)."""
+        inflight: deque[tuple[dict, int]] = deque()
         for nxt in self._batches(signal):       # async: in flight now
-            if inflight is not None:
-                yield self._collect(*inflight)
-            inflight = nxt
-        if inflight is not None:
-            yield self._collect(*inflight)
+            inflight.append(nxt)
+            if len(inflight) > self.cfg.depth:
+                yield self._collect(*inflight.popleft())
+        while inflight:
+            yield self._collect(*inflight.popleft())
 
     @staticmethod
     def _collect(out: dict, valid: int) -> dict:

@@ -17,11 +17,10 @@ driven on the production mesh via launch/dryrun_pp.py.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 

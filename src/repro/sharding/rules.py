@@ -21,10 +21,9 @@ roofline "useful-FLOPs" ratio. Batch/seq axes require exact divisibility.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding, PartitionSpec
 
 
 # logical name -> ordered candidate lists of mesh-axis groups

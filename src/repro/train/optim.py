@@ -10,7 +10,7 @@ Distributed-optimization features:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ storage tree has a different rank than the parameter it tracks.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -18,7 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models import layers as L
 from repro.sharding import ctx as shard_ctx
-from repro.sharding.rules import Strategy, batch_sharding, sharding_tree, replicated
+from repro.sharding.rules import Strategy, sharding_tree, replicated
 from repro.train import optim
 
 

@@ -5,8 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.analysis.hlo_cost import (HloCost, analyze, parse_hlo,
-                                     replica_groups, type_bytes)
+from repro.analysis.hlo_cost import analyze, replica_groups, type_bytes
 from repro.sharding.rules import Strategy, spec_for
 
 

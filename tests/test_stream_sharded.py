@@ -1,0 +1,270 @@
+"""Multi-column sharded streaming: the `data`-axis column deal must be
+invisible in the numbers.
+
+Property-style sweeps pin sharded == single-device outputs across dividing
+and non-dividing (n_frames, D) and (window, hop) combinations, including
+the zero-frame and tail-padding paths. The serial-column fallback makes
+every property testable on one device; when the process actually has >=
+n_columns devices (the CI multi-device leg runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the same sweeps
+exercise the real `shard_map` path — plus one subprocess test that forces
+8 host devices regardless of the outer environment, so the shard_map path
+is covered even in a default single-device run."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.biosignal import make_app, synthetic_respiration
+from repro.kernels.pipeline.ops import app_pipeline, app_pipeline_stream
+from repro.kernels.pipeline.shard import (column_chunks, column_frames,
+                                          data_mesh_size,
+                                          pipeline_stream_sharded)
+from repro.serve.engine import ColumnScheduler
+from repro.serve.stream import (BiosignalStream, StreamConfig, column_mesh,
+                                frame_count, frame_signal)
+
+ROOT = Path(__file__).resolve().parent.parent
+N_DEV = len(jax.devices())
+
+
+def _assert_matches(out, ref, tol=1e-4):
+    assert sorted(out) == sorted(ref)
+    for k in ref:
+        a = np.asarray(ref[k], np.float64)
+        b = np.asarray(out[k], np.float64)
+        assert a.shape == b.shape, (k, a.shape, b.shape)
+        if k == "class":
+            np.testing.assert_array_equal(b, a)
+        elif a.size:
+            scale = max(1.0, float(np.abs(a).max()))
+            assert float(np.abs(a - b).max()) / scale < tol, k
+
+
+def _mesh_for(d):
+    """Real mesh when the device set allows, else None (serial fallback) —
+    so the same sweep covers shard_map on the multi-device CI leg and the
+    fallback everywhere."""
+    return column_mesh(d)
+
+
+@pytest.mark.parametrize("n_columns", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("window,hop,n_samples", [
+    (512, 128, 512 * 9),        # deep overlap, frames % D varies
+    (512, 512, 512 * 5 + 17),   # no overlap -> no halo
+    (1024, 320, 7001),          # hop divides neither window nor signal
+])
+def test_sharded_stream_matches_single_device(window, hop, n_samples,
+                                              n_columns):
+    app = make_app()
+    sig, _ = synthetic_respiration(1, n_samples, seed=n_samples + n_columns)
+    raw = sig[0]
+    ref = app_pipeline_stream(app, raw, window=window, hop=hop)
+    out = app_pipeline_stream(app, raw, window=window, hop=hop,
+                              n_columns=n_columns, mesh=_mesh_for(n_columns))
+    _assert_matches(out, ref)
+
+
+@pytest.mark.parametrize("n_columns", [2, 4])
+@pytest.mark.parametrize("rows", [1, 7, 8, 30])
+def test_sharded_framed_matches_single_device(rows, n_columns):
+    """Pre-framed row deal: dividing (8/2) and non-dividing (7/4, 30/4)
+    row counts, including rows < D (1/2: pad columns all-garbage)."""
+    app = make_app()
+    sig, _ = synthetic_respiration(rows, 512, seed=rows)
+    ref = app_pipeline(app, sig)
+    out = app_pipeline(app, sig, n_columns=n_columns,
+                       mesh=_mesh_for(n_columns))
+    _assert_matches(out, ref)
+
+
+@pytest.mark.parametrize("n_columns", [1, 3, 8])
+@pytest.mark.parametrize("n_samples", [0, 100, 511])
+def test_sharded_zero_frame_paths(n_samples, n_columns):
+    """Signals shorter than one window: every D returns the canonical
+    empty dict, same keys/dtypes as the hot path."""
+    app = make_app()
+    raw = np.zeros(n_samples, np.float32)
+    out = app_pipeline_stream(app, raw, window=512, hop=256,
+                              n_columns=n_columns,
+                              outputs=("features", "class"))
+    assert sorted(out) == ["class", "features"]
+    assert out["features"].shape == (0, 12)
+    assert out["class"].shape == (0,)
+    assert out["class"].dtype == np.int32
+
+
+def test_column_chunk_arithmetic():
+    """The hop-boundary split: chunk d starts at frame d*n_d's first
+    sample, carries the window-hop halo, and frames to exactly n_d
+    windows — so per-device staged bytes are ~n_samples/D + halo."""
+    window, hop, D = 512, 128, 4
+    sig = np.arange(512 * 9, dtype=np.float32)
+    n = frame_count(sig.shape[0], window, hop)
+    n_d = column_frames(n, D)
+    chunks, n_out = column_chunks(sig, window, hop, D)
+    assert n_out == n
+    assert chunks.shape == (D, n_d * hop + window - hop)
+    for d in range(D):
+        start = d * n_d * hop
+        got = np.asarray(chunks[d])
+        want = sig[start: start + got.shape[0]]
+        np.testing.assert_array_equal(got[: want.shape[0]], want)
+        assert (got[want.shape[0]:] == 0).all()     # zero-padded tail
+        assert frame_count(got.shape[0], window, hop) == n_d
+    # no-frame signal
+    assert column_chunks(sig[:100], window, hop, D) == (None, 0)
+
+
+def test_sharded_autotune_key_carries_device_count():
+    """Winners are per-(shape, D): the same traffic tuned at D=1 and D=4
+    lands in distinct cache entries, and only the sharded one carries D."""
+    from repro.core import autotune
+
+    autotune.clear_cache()
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 512 * 8, seed=11)
+    raw = sig[0]
+    for d in (1, 4):
+        app_pipeline_stream(app, raw, window=512, hop=256, autotune=True,
+                            n_columns=d, mesh=_mesh_for(d))
+    keys = sorted(autotune.cache_snapshot(), key=len)
+    assert len(keys) == 2
+    assert keys[0][:2] == ("biosignal_pipeline_stream",
+                           frame_count(512 * 8, 512, 256))
+    assert keys[1][-1] == 4 and len(keys[1]) == len(keys[0]) + 1
+    autotune.clear_cache()
+
+
+def test_stream_runtime_columns_match_and_tail(monkeypatch):
+    """BiosignalStream(n_columns=D): each dispatch deals batch_windows
+    frames per column, the tail batch (frames % (bw*D) != 0) is padded
+    and trimmed, and outputs equal the single-column runtime's."""
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 512 * 21 + 77, seed=13)
+    raw = sig[0]
+    ref = BiosignalStream(app, StreamConfig(
+        window=512, hop=256, batch_windows=4)).process(raw)
+    cfg = StreamConfig(window=512, hop=256, batch_windows=2, n_columns=3)
+    stream = BiosignalStream(app, cfg)
+    assert stream.dispatch_windows == 6
+    out = stream.process(raw)
+    _assert_matches(out, ref)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_stream_depth_pipelining(depth):
+    """Any in-flight depth yields identical, identically-ordered batches."""
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 512 * 13 + 5, seed=29)
+    raw = sig[0]
+    cfg = StreamConfig(window=512, hop=512, batch_windows=4, depth=depth)
+    out = BiosignalStream(app, cfg).process(raw)
+    ref = app_pipeline(app, frame_signal(raw, 512, 512))
+    _assert_matches(out, ref)
+
+
+def test_column_scheduler_places_streams_on_distinct_columns():
+    devs = jax.devices() * 3          # synthetic 3x replica of the host set
+    sched = ColumnScheduler(devs)
+    assert sched.n_columns == len(devs)
+    placed = [sched.admit(f"s{i}") for i in range(len(devs))]
+    # one stream per column before any column doubles up (round-robin fill)
+    assert [sched.column_of(f"s{i}") for i in range(len(devs))] == \
+        list(range(len(devs)))
+    assert placed == devs
+    # next admit doubles up on the least-loaded (lowest-index) column
+    sched.admit("extra")
+    assert sched.column_of("extra") == 0
+    assert sched.loads()[0] == 2
+    # release rebalances: the freed column is preferred again
+    sched.release("s1")
+    sched.admit("reuse")
+    assert sched.column_of("reuse") == 1
+    with pytest.raises(AssertionError):
+        sched.admit("reuse")
+
+
+def test_column_scheduler_opens_pinned_streams():
+    """open_stream admits + constructs; the pinned stream's outputs match
+    an unpinned run (placement must be numerically invisible)."""
+    app = make_app()
+    sched = ColumnScheduler()
+    sig, _ = synthetic_respiration(1, 512 * 6, seed=3)
+    raw = sig[0]
+    cfg = StreamConfig(window=512, hop=256, batch_windows=4)
+    stream = sched.open_stream(app, cfg, stream_id="sensor-a")
+    assert stream.device is sched.devices[sched.column_of("sensor-a")]
+    out = stream.process(raw)
+    ref = BiosignalStream(app, cfg).process(raw)
+    _assert_matches(out, ref)
+    sched.release("sensor-a")
+    assert sched.loads() == [0] * sched.n_columns
+    with pytest.raises(AssertionError):
+        BiosignalStream(app, StreamConfig(n_columns=2),
+                        device=sched.devices[0])
+
+
+@pytest.mark.skipif(N_DEV < 8, reason="needs 8 devices (CI multi-device "
+                    "leg sets xla_force_host_platform_device_count=8)")
+def test_shard_map_path_is_active_on_multidevice():
+    """On a real >= 8-device process the mesh is built and the shard_map
+    path (not the serial fallback) must produce the reference numbers."""
+    mesh = column_mesh(8)
+    assert mesh is not None and data_mesh_size(mesh) == 8
+    app = make_app()
+    sig, _ = synthetic_respiration(1, 512 * 17 + 131, seed=8)
+    raw = sig[0]
+    out = pipeline_stream_sharded(raw, app.fir_taps, app.svm_w, app.svm_b,
+                                  window=512, hop=128, n_columns=8,
+                                  mesh=mesh)
+    ref = app_pipeline_stream(app, raw, window=512, hop=128)
+    _assert_matches(out, ref)
+    # runtime plumbing picks the mesh up on its own
+    cfg = StreamConfig(window=512, hop=128, batch_windows=2, n_columns=8)
+    stream = BiosignalStream(app, cfg)
+    assert stream.mesh is not None
+    _assert_matches(stream.process(raw), ref)
+
+
+@pytest.mark.slow
+def test_sharded_d8_subprocess_forced_devices(tmp_path):
+    """D=8 shard_map equivalence under forced 8 host devices — covered
+    even when the outer pytest runs single-device (the laptop/CI-default
+    case). Mirrors the launch/dryrun.py trick: XLA_FLAGS must be set
+    before any jax import, hence the subprocess."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core.biosignal import make_app, synthetic_respiration
+from repro.kernels.pipeline.ops import app_pipeline_stream
+from repro.launch.mesh import make_local_mesh
+
+app = make_app()
+sig, _ = synthetic_respiration(1, 512 * 19 + 77, seed=42)
+raw = sig[0]
+ref = app_pipeline_stream(app, raw, window=512, hop=128)
+for d in (2, 8):
+    out = app_pipeline_stream(app, raw, window=512, hop=128, n_columns=d,
+                              mesh=make_local_mesh(data=d))
+    np.testing.assert_array_equal(np.asarray(out["class"]),
+                                  np.asarray(ref["class"]))
+    err = float(np.abs(np.asarray(out["margin"]) -
+                       np.asarray(ref["margin"])).max())
+    assert err < 1e-4, (d, err)
+print("sharded-subprocess-ok")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "sharded-subprocess-ok" in r.stdout
