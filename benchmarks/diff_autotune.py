@@ -24,29 +24,46 @@ Raw winner drift (a different measured block choice) stays informational
 even under ``--gate`` — on shared runners near-tied candidates flip on
 machine noise; the gate fires only when the pinned perf actually moved.
 
-Usage:  python -m benchmarks.diff_autotune OLD.json NEW.json [--strict|--gate]
+A MISSING or UNREADABLE baseline is never a silent pass: the gate prints
+an explicit "no baseline, gate SKIPPED" warning and exits with the
+distinct code ``EXIT_NO_BASELINE`` (3) — so a broken artifact download
+cannot masquerade as a green gate. CI (where the first run on a fresh
+repo legitimately has no baseline) passes ``--missing-baseline-ok`` to
+turn that path into a loudly-labelled success instead.
+
+Usage:  python -m benchmarks.diff_autotune OLD.json NEW.json
+            [--strict|--gate] [--missing-baseline-ok]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 # tolerance floor: rep spread on a quiet machine is a few %, but CI
 # neighbours can inflate it — never gate tighter than this
 RATIO_FLOOR = 0.10
 SPREAD_MULT = 3.0
+# distinct exit path for "the baseline artifact never arrived": neither
+# the green 0 nor the regression 1
+EXIT_NO_BASELINE = 3
 
 
-def _load(path: str) -> dict:
-    with open(path) as f:
-        data = json.load(f)
+def _read(path: str):
+    """Parsed artifact, or None when missing/unreadable (the caller turns
+    that into the explicit no-baseline path — never a silent pass)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except Exception as e:
+        print(f"WARNING: cannot read {path}: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return None
+
+
+def _winners(data: dict) -> dict:
     return {json.dumps(e["key"]): int(e["block_rows"])
             for e in data.get("autotune_winners", [])}
-
-
-def _load_pinned(path: str) -> dict:
-    with open(path) as f:
-        return json.load(f).get("pinned", {})
 
 
 def diff(old: dict, new: dict) -> list[str]:
@@ -100,8 +117,25 @@ def main() -> None:
                     help="fail on pinned-shape perf regressions beyond the "
                          "paired-rep variance threshold (winner drift "
                          "alone stays informational)")
+    ap.add_argument("--missing-baseline-ok", action="store_true",
+                    help="exit 0 (instead of the distinct no-baseline code "
+                         f"{EXIT_NO_BASELINE}) when the OLD artifact is "
+                         "missing/unreadable — for the legitimate "
+                         "first-run-on-a-fresh-repo case; the skip is "
+                         "still printed loudly")
     args = ap.parse_args()
-    old, new = _load(args.old), _load(args.new)
+    old_data = _read(args.old)
+    # the current run's artifact must always parse: a broken NEW file is
+    # a bench bug, not a missing baseline
+    new_data = _read(args.new)
+    if new_data is None:
+        print(f"diff_autotune: current artifact {args.new} unreadable")
+        raise SystemExit(1)
+    if old_data is None:
+        print(f"WARNING: no baseline ({args.old} missing/unreadable), "
+              f"gate SKIPPED - nothing was compared")
+        raise SystemExit(0 if args.missing_baseline_ok else EXIT_NO_BASELINE)
+    old, new = _winners(old_data), _winners(new_data)
     lines = diff(old, new)
     if not lines:
         print(f"autotune winners unchanged ({len(new)} entries)")
@@ -110,8 +144,8 @@ def main() -> None:
         for line in lines:
             print(" ", line)
     if args.gate:
-        report, failures = gate_pinned(_load_pinned(args.old),
-                                       _load_pinned(args.new))
+        report, failures = gate_pinned(old_data.get("pinned", {}),
+                                       new_data.get("pinned", {}))
         for line in report:
             print("  pinned:", line)
         for line in failures:

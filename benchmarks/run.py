@@ -46,6 +46,16 @@ def main() -> None:
                     "1.25; the multi-device CI leg gates at 1.05 — "
                     "splitting the host thread pool across 8 fake devices "
                     "thins the margin without touching the property)")
+    ap.add_argument("--check-hetero", action="store_true",
+                    help="fail unless the telemetry-driven dynamic deal "
+                         "(*/stream_hetero_dynamic) beats the static equal "
+                         "deal (*/stream_hetero_static) by >= the "
+                         "--hetero-ratio threshold when one of D=4 columns "
+                         "carries a 2x background load — the load-aware "
+                         "scheduler gate")
+    ap.add_argument("--hetero-ratio", type=float, default=1.15,
+                    metavar="R", help="--check-hetero threshold "
+                    "(default 1.15)")
     ap.add_argument("--check-columns", action="store_true",
                     help="fail unless the */stream_ncols{D} column-scaling "
                          "sweep is monotone: per-column latency must drop "
@@ -119,6 +129,25 @@ def main() -> None:
                 raise SystemExit(1)
             print(f"check-stream ok: {stream} {us:.1f}us, {framed} "
                   f"{uf:.1f}us ({uf / us:.2f}x)")
+    if args.check_hetero:
+        by_name = {r["name"]: r["us_per_call"] for r in rows}
+        pairs = [(n, n.rsplit("stream_hetero_dynamic", 1)[0] +
+                  "stream_hetero_static")
+                 for n in by_name if n.endswith("stream_hetero_dynamic")]
+        if not pairs:
+            print("check-hetero: no stream_hetero rows found",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        for dyn, stat in pairs:
+            ud, us = by_name[dyn], by_name.get(stat)
+            if us is None or us < args.hetero_ratio * ud:
+                print(f"check-hetero FAILED: {dyn}={ud:.1f}us vs "
+                      f"{stat}={us}us (dynamic deal must be >= "
+                      f"{args.hetero_ratio}x faster under a loaded column)",
+                      file=sys.stderr)
+                raise SystemExit(1)
+            print(f"check-hetero ok: {dyn} {ud:.1f}us, {stat} {us:.1f}us "
+                  f"({us / ud:.2f}x)")
     if args.check_columns:
         import re
 

@@ -191,6 +191,167 @@ def _column_rows():
     return rows
 
 
+def _hetero_rows():
+    """Heterogeneous-load column deal: static equal split vs the
+    telemetry-driven dynamic deal when ONE of D=4 columns carries a 2x
+    background load (a second tenant's 16-frame dispatch riding on column
+    0 — the Versa-style column-shared-with-an-LM-engine scenario).
+
+    Columns are timed serially (the serial-fallback path, measurable on
+    one device, same convention as `_column_rows`); the modelled dispatch
+    wall is max over columns of (column share time + its background
+    time), which on a real D-device machine IS the wall clock. The
+    dynamic deal replays measured per-column times through
+    `StreamTelemetry` (injected clock), takes `ColumnScheduler.
+    deal_weights(band=0.3)` — measured windows/s per column, deadband-
+    clustered so jitter between the identical light columns cannot skew
+    the deal — and re-deals via `column_chunks(weights=...)`; one
+    refinement round (the periodic rebalance in miniature) converges the
+    deal against the loaded column's ADDITIVE background cost. Both
+    deals' columns are then timed alternately in ONE paired rep loop.
+    Measured on CPU interpret: deterministic deal (7, 19, 19, 19) and
+    1.27-1.39x over the static wall across trials; CI gates dynamic >=
+    1.15x static throughput via ``run.py --check-hetero``.
+    """
+    import jax
+
+    from repro.core.biosignal import make_app, synthetic_respiration
+    from repro.kernels.pipeline.ops import app_pipeline_stream
+    from repro.kernels.pipeline.shard import column_chunks
+    from repro.serve.engine import ColumnScheduler
+    from repro.serve.stream import StreamTelemetry
+
+    app = make_app()
+    # hop = window/2 keeps the kernel's frame-block floor at 1, and
+    # block_frames=1 makes a column's cost LINEAR in its share — a deal
+    # quantized to an 8-frame grid block would round a 9-frame share back
+    # up to 16 frames of compute and erase the re-deal's win
+    window, hop, n_frames, D = 2048, 1024, 64, 4
+    cls_outputs = ("features", "margin", "class")
+    block = 1                     # pinned: every share runs the same block
+    sig, _ = synthetic_respiration(1, (n_frames - 1) * hop + window, seed=6)
+    raw = sig[0]
+    bg_sig, _ = synthetic_respiration(
+        1, (n_frames // D - 1) * hop + window, seed=7)
+    bg = bg_sig[0]                # the tenant's own 16-frame dispatch
+
+    def col_fn(chunk):
+        return lambda: app_pipeline_stream(
+            app, chunk, window=window, hop=hop, outputs=cls_outputs,
+            block_frames=block)
+
+    def col_slices(shares, chunks):
+        return [chunks[d][: s * hop + (window - hop)] if s else None
+                for d, s in enumerate(shares)]
+
+    def walls(per_col_times, bg_times):
+        """Per-rep modelled dispatch wall: max over columns, background
+        load added onto column 0. Used for the pinned record's rep
+        spread; the headline wall takes each column's best-of-reps first
+        (`wall_best`) — on a real D-device machine the columns run
+        independently, so one host-jitter rep on one column must not
+        inflate the modelled wall."""
+        return [max(ts[i] + (bg_times[i] if d == 0 else 0.0)
+                    for d, ts in enumerate(per_col_times))
+                for i in range(len(bg_times))]
+
+    def wall_best(per_col_times, bg_times):
+        return max(min(ts) + (min(bg_times) if d == 0 else 0.0)
+                   for d, ts in enumerate(per_col_times))
+
+    chunks_s, _, shares_s = column_chunks(raw, window, hop, D)
+    cols_s = col_slices(shares_s, chunks_s)
+
+    # CALIBRATION round: measure the static deal's per-column busy times
+    # and replay them through the telemetry (virtual clock: retires of
+    # share windows spaced by the MEDIAN-of-reps busy time — on a noisy
+    # runner the median is the tightest per-column estimator: min still
+    # jitters ~15% between identical columns, median ~8%), then ask the
+    # scheduler for the deal weights with a 30% deadband (`band`) so
+    # residual jitter between the three identical light columns cannot
+    # deal them unequal shares (the 2x-loaded column sits ~100% away —
+    # far outside the band)
+    cal = _paired_times([col_fn(bg)] + [col_fn(c) for c in cols_s],
+                        reps=13)
+    bg_cal, col_cal = cal[0], cal[1:]
+
+    def _median(ts):
+        return sorted(ts)[len(ts) // 2]
+
+    now = [0.0]
+    tel = StreamTelemetry(alpha=0.5, clock=lambda: now[0])
+    vt = [0.0] * D
+    busy = [_median(ts) + (_median(bg_cal) if d == 0 else 0.0)
+            for d, ts in enumerate(col_cal)]
+    for d in range(D):
+        tel.attach(f"col{d}", d)
+    for _ in range(3):
+        for d in range(D):
+            vt[d] += busy[d] * 1e-6
+            now[0] = vt[d]
+            tel.record_retire(f"col{d}", shares_s[d])
+    sched = ColumnScheduler([jax.devices()[0]] * D, telemetry=tel)
+
+    def redeal():
+        weights = sched.deal_weights(band=0.3)
+        chunks_w, _, shares_w = column_chunks(raw, window, hop, D, weights)
+        return weights, shares_w, col_slices(shares_w, chunks_w)
+
+    weights, shares_d, cols_d = redeal()
+    # one REFINEMENT round — the periodic rebalance in miniature: measure
+    # the first re-deal, feed the new retires into the same telemetry,
+    # deal again. A single rate-proportional step under-shifts when the
+    # background load is additive (the loaded column's cost is fixed +
+    # share, not proportional); the closed loop converges on it.
+    ref = _paired_times([col_fn(bg)] +
+                        [col_fn(c) for c in cols_d if c is not None],
+                        reps=9)
+    ref_cols = iter(ref[1:])
+    busy = [(next(ref_cols) if s else None) for s in shares_d]
+    for _ in range(3):
+        for d in range(D):
+            if shares_d[d] == 0:
+                continue
+            vt[d] += (_median(busy[d]) +
+                      (_median(ref[0]) if d == 0 else 0.0)) * 1e-6
+            now[0] = vt[d]
+            tel.record_retire(f"col{d}", shares_d[d])
+    weights, shares_d, cols_d = redeal()
+    cols_d = [c for c in cols_d if c is not None]
+
+    # FINAL round: BOTH deals' columns timed alternately in ONE paired
+    # rep loop (machine drift between two separate rounds was measurable
+    # as a coin-flip headline; within-loop pairing hits both deals
+    # equally), walls computed per rep from the same loop
+    fns = [col_fn(bg)] + [col_fn(c) for c in cols_s] + \
+        [col_fn(c) for c in cols_d]
+    times = _paired_times(fns, reps=12)
+    bg_t = times[0]
+    per_col_s = times[1: 1 + D]
+    dyn_iter = iter(times[1 + D:])
+    per_col_d = [next(dyn_iter) if s else [0.0] * len(bg_t)
+                 for s in shares_d]
+    wall_s = walls(per_col_s, bg_t)
+    wall_d = walls(per_col_d, bg_t)
+    us_s = wall_best(per_col_s, bg_t)
+    us_d = wall_best(per_col_d, bg_t)
+    from repro.core import autotune
+
+    autotune.record_pinned("table5/stream_hetero", wall_d,
+                           baseline_us=wall_s)
+    rates = ";".join(f"{w:.1f}" for w in weights)
+    return [
+        ("table5/stream_hetero_static", us_s,
+         f"modelled dispatch wall, equal deal {tuple(shares_s)} with a "
+         f"{n_frames // D}-frame background tenant on column 0;"
+         f"windows_per_s={n_frames / us_s * 1e6:.0f}"),
+        ("table5/stream_hetero_dynamic", us_d,
+         f"telemetry-driven deal {tuple(shares_d)} (measured col rates "
+         f"w/s: {rates});windows_per_s={n_frames / us_d * 1e6:.0f};"
+         f"speedup_vs_static={us_s / us_d:.2f}x"),
+    ]
+
+
 def _depth_rows():
     """Streaming-runtime pipelining depth: depth=1 (the classic double
     buffer — consume batch k while k+1 is in flight) vs depth=2 (two
@@ -264,5 +425,6 @@ def run():
     rows += _pipeline_rows()
     rows += _stream_rows()
     rows += _column_rows()
+    rows += _hetero_rows()
     rows += _depth_rows()
     return rows

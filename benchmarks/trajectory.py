@@ -1,0 +1,123 @@
+"""Accumulate the CI perf trajectory: BENCH_trajectory.json.
+
+Each bench-smoke run produces a fresh BENCH_smoke.json (plus the pinned
+records inside BENCH_autotune.json) — and until now that history died with
+the run: artifacts are per-commit, so the trajectory across commits was
+only reconstructible by hand. This tool appends ONE commit-stamped row per
+run to a rolling BENCH_trajectory.json that CI persists via
+`actions/cache` (restore-keys fall back to the branch's previous run, then
+any run) and re-uploads as an artifact, so after two runs on main the
+artifact carries >= 2 entries and the perf trajectory of every gated
+headline number is a single downloadable file.
+
+An entry is deliberately compact — {commit, branch, time, rows, pinned} —
+where ``rows`` maps every bench row name to its us_per_call and ``pinned``
+carries the paired-ratio records the regression gate runs on. Re-running a
+commit (e.g. a re-triggered workflow) REPLACES its entry instead of
+duplicating it; the file is capped at ``--max-entries`` (oldest dropped).
+A missing or corrupt trajectory file starts fresh with a warning — a
+broken cache restore must not fail the bench job, only re-seed history.
+
+Usage:
+    python -m benchmarks.trajectory append TRAJ.json BENCH.json \
+        --commit SHA [--branch B] [--autotune BENCH_autotune.json] \
+        [--max-entries N]
+    python -m benchmarks.trajectory show TRAJ.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _load_trajectory(path: str) -> list[dict]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        entries = data["entries"]
+        assert isinstance(entries, list)
+        return entries
+    except FileNotFoundError:
+        return []
+    except Exception as e:  # corrupt restore: re-seed, don't fail the job
+        print(f"trajectory: {path} unreadable ({type(e).__name__}: {e}) "
+              f"- starting a fresh trajectory", file=sys.stderr)
+        return []
+
+
+def make_entry(bench: dict, *, commit: str, branch: str,
+               pinned: dict | None = None,
+               timestamp: float | None = None) -> dict:
+    rows = {r["name"]: round(float(r["us_per_call"]), 2)
+            for r in bench.get("rows", [])
+            if isinstance(r.get("us_per_call"), (int, float))}
+    return {"commit": commit, "branch": branch,
+            "time": time.time() if timestamp is None else timestamp,
+            "failed": bench.get("failed", 0), "rows": rows,
+            "pinned": pinned or {}}
+
+
+def append(traj_path: str, bench_path: str, *, commit: str, branch: str,
+           autotune_path: str | None = None, max_entries: int = 500,
+           timestamp: float | None = None) -> int:
+    """Append (or replace, same commit) one entry; returns the new count."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    pinned = {}
+    if autotune_path:
+        try:
+            with open(autotune_path) as f:
+                pinned = json.load(f).get("pinned", {})
+        except Exception as e:
+            print(f"trajectory: no pinned records from {autotune_path} "
+                  f"({type(e).__name__})", file=sys.stderr)
+    entries = _load_trajectory(traj_path)
+    entries = [e for e in entries if e.get("commit") != commit]
+    entries.append(make_entry(bench, commit=commit, branch=branch,
+                              pinned=pinned, timestamp=timestamp))
+    entries = entries[-max_entries:]
+    with open(traj_path, "w") as f:
+        json.dump({"entries": entries}, f, indent=1)
+    return len(entries)
+
+
+def show(traj_path: str) -> None:
+    entries = _load_trajectory(traj_path)
+    print(f"{traj_path}: {len(entries)} entries")
+    for e in entries:
+        pins = ", ".join(
+            f"{k.split('/')[-1]}={v['ratio']:.2f}x"
+            for k, v in sorted(e.get("pinned", {}).items())
+            if isinstance(v, dict) and "ratio" in v)
+        print(f"  {e.get('commit', '?')[:12]:12s} {e.get('branch', '?'):16s}"
+              f" rows={len(e.get('rows', {})):3d}"
+              f" failed={e.get('failed', 0)}  {pins}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_a = sub.add_parser("append", help="append one run to the trajectory")
+    ap_a.add_argument("trajectory")
+    ap_a.add_argument("bench")
+    ap_a.add_argument("--commit", required=True)
+    ap_a.add_argument("--branch", default="")
+    ap_a.add_argument("--autotune", default=None,
+                      help="BENCH_autotune.json to lift pinned records from")
+    ap_a.add_argument("--max-entries", type=int, default=500)
+    ap_s = sub.add_parser("show", help="print the trajectory")
+    ap_s.add_argument("trajectory")
+    args = ap.parse_args()
+    if args.cmd == "append":
+        n = append(args.trajectory, args.bench, commit=args.commit,
+                   branch=args.branch, autotune_path=args.autotune,
+                   max_entries=args.max_entries)
+        print(f"trajectory: {args.trajectory} now holds {n} entries")
+    else:
+        show(args.trajectory)
+
+
+if __name__ == "__main__":
+    main()

@@ -168,17 +168,23 @@ def candidate_stream_block_frames(n_frames: int, window: int, hop: int,
 def tuned_stream_block_frames(name: str, n_frames: int, window: int,
                               hop: int, outputs: tuple, dtype: str,
                               run: Callable[[int], object],
-                              n_columns: int = 1) -> int:
+                              n_columns: int = 1,
+                              shares: tuple | None = None) -> int:
     """`tuned_block_rows` for the raw-signal streaming kernel: the cache
     key carries the full (window, hop, outputs) shape — the same window
     batch tuned for classification-only traffic (no `filtered` write) may
     legitimately pick a different block than the all-outputs variant —
     plus the column count when sharded (`n_columns > 1`): each column
     stages only ~n_frames/D frames, so the right block is per-(shape, D).
-    Candidates are enumerated over the per-column frame share."""
+    A non-uniform deal additionally carries its quantized share signature
+    (``shares``, the `column_shares` frame counts): a winner measured on
+    a (9, 19, 18, 18) deal must not leak onto the (16,)*4 equal deal.
+    Candidates are enumerated over the WIDEST per-column share — the
+    column that bounds the dispatch wall."""
+    sig = () if shares is None else ("w",) + tuple(shares)
     key = _freeze((name, n_frames, window, hop, outputs, dtype)
-                  + ((n_columns,) if n_columns > 1 else ()))
-    per_col = -(-n_frames // n_columns)
+                  + ((n_columns,) if n_columns > 1 else ()) + sig)
+    per_col = max(shares) if shares is not None else -(-n_frames // n_columns)
     return autotune_block_rows(
-        key, candidate_stream_block_frames(per_col, window, hop),
+        key, candidate_stream_block_frames(max(per_col, 1), window, hop),
         lambda rb: lambda: run(rb))

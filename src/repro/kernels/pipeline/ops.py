@@ -19,7 +19,7 @@ from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
                                            pipeline_pallas,
                                            pipeline_stream_pallas,
                                            stream_frame_count)
-from repro.kernels.pipeline.shard import (pipeline_sharded,
+from repro.kernels.pipeline.shard import (column_shares, pipeline_sharded,
                                           pipeline_stream_sharded)
 
 __all__ = ["OUTPUTS", "canonical_outputs", "biosignal_pipeline",
@@ -72,7 +72,8 @@ def biosignal_pipeline_stream(signal, taps, w, b, *, window: int, hop: int,
                               fft_size: int = 512,
                               block_frames: int | None = None,
                               autotune: bool = False, outputs=None,
-                              n_columns: int = 1, mesh=None):
+                              n_columns: int = 1, mesh=None,
+                              column_weights=None):
     """Run the pipeline over a RAW 1-D signal with in-kernel (window, hop)
     framing — the single-residency streaming path. Output equals
     ``biosignal_pipeline`` on host-framed windows, to the last bit.
@@ -82,25 +83,38 @@ def biosignal_pipeline_stream(signal, taps, w, b, *, window: int, hop: int,
     key. ``n_columns > 1`` deals hop-aligned signal chunks (+ window-hop
     halo) across column replicas via `shard_map` over ``mesh``'s `data`
     axis (serial columns when no mesh fits) — outputs stay equal to the
-    single-device call.
+    single-device call. ``column_weights`` makes that deal load-aware
+    (non-uniform `column_shares`, e.g. measured per-column rates from
+    `serve.stream.StreamTelemetry`); the autotune key then carries the
+    quantized share signature so winners don't leak across deal shapes.
     """
     outputs = canonical_outputs(outputs)
     interpret = _interpret()
+    assert column_weights is None or len(column_weights) == n_columns, \
+        (column_weights, n_columns)
+    if n_columns == 1:
+        # a single weight is the degenerate identity deal: normalize it
+        # away so it neither reaches the kernel nor splits the autotune
+        # key of the identical computation
+        column_weights = None
     run_cols = functools.partial(pipeline_stream_sharded,
-                                 n_columns=n_columns, mesh=mesh) \
+                                 n_columns=n_columns, mesh=mesh,
+                                 weights=column_weights) \
         if n_columns > 1 else pipeline_stream_pallas
     if autotune and block_frames is None:
         from repro.core.autotune import tuned_stream_block_frames
 
         n = stream_frame_count(signal.shape[0], window, hop)
         if n > 1:
+            shares = column_shares(n, n_columns, column_weights) \
+                if column_weights is not None else None
             block_frames = tuned_stream_block_frames(
                 "biosignal_pipeline_stream", n, window, hop, outputs,
                 str(signal.dtype),
                 lambda rb: run_cols(
                     signal, taps, w, b, window=window, hop=hop,
                     fft_size=fft_size, interpret=interpret, block_frames=rb,
-                    outputs=outputs), n_columns=n_columns)
+                    outputs=outputs), n_columns=n_columns, shares=shares)
     return run_cols(signal, taps, w, b, window=window, hop=hop,
                     fft_size=fft_size, interpret=interpret,
                     block_frames=block_frames, outputs=outputs)
@@ -120,11 +134,13 @@ def app_pipeline(app, signal, *, block_rows: int | None = None,
 def app_pipeline_stream(app, signal, *, window: int, hop: int,
                         block_frames: int | None = None,
                         autotune: bool = False, outputs=None,
-                        n_columns: int = 1, mesh=None):
+                        n_columns: int = 1, mesh=None,
+                        column_weights=None):
     """Fused raw-signal streaming execution of a `BiosignalApp`."""
     return biosignal_pipeline_stream(signal, app.fir_taps, app.svm_w,
                                      app.svm_b, window=window, hop=hop,
                                      fft_size=app.fft_size,
                                      block_frames=block_frames,
                                      autotune=autotune, outputs=outputs,
-                                     n_columns=n_columns, mesh=mesh)
+                                     n_columns=n_columns, mesh=mesh,
+                                     column_weights=column_weights)

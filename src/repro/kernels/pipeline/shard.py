@@ -27,6 +27,17 @@ makes frames independent of how chunks are cut). When no mesh is
 available (or D exceeds the device count) the identical per-column body
 runs serially on one device — the fallback tests rely on for
 device-count-independent equivalence properties.
+
+LOAD-AWARE DEAL: ``weights`` generalizes the equal split to non-uniform
+hop-aligned shares — column d owns a contiguous run of frames whose count
+is proportional to its weight (largest-remainder apportionment, so shares
+sum to exactly n_frames and every chunk still starts on a hop boundary;
+the halo logic is unchanged). ``weights=None`` is the equal-deal fast
+path, bit-for-bit the PR-4 behaviour. The serving layer feeds measured
+per-column throughput (`serve.stream.StreamTelemetry` EWMAs) in as the
+weight vector so an externally loaded column — e.g. one shared with the
+LM engine — is dealt a proportionally smaller share: the software
+analogue of work-stealing between VWR2A columns.
 """
 from __future__ import annotations
 
@@ -42,8 +53,8 @@ from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
                                            pipeline_stream_pallas,
                                            stream_frame_count)
 
-__all__ = ["column_frames", "column_chunks", "pipeline_sharded",
-           "pipeline_stream_sharded", "data_mesh_size"]
+__all__ = ["column_frames", "column_shares", "column_chunks",
+           "pipeline_sharded", "pipeline_stream_sharded", "data_mesh_size"]
 
 
 def data_mesh_size(mesh) -> int:
@@ -63,37 +74,80 @@ def _check_mesh(mesh, n_columns: int) -> None:
 
 
 def column_frames(n_frames: int, n_columns: int) -> int:
-    """Frames per column: the conserved-work deal. Every column processes
-    the same padded count (shard_map shards must agree on shape); the
-    `n_columns*column_frames - n_frames` pad frames are trimmed after."""
+    """Frames per column: the conserved-work equal deal. Every column
+    processes the same padded count (shard_map shards must agree on
+    shape); the `n_columns*column_frames - n_frames` pad frames are
+    trimmed after."""
     assert n_columns >= 1, n_columns
     return -(-max(n_frames, 1) // n_columns)
 
 
-def column_chunks(signal, window: int, hop: int, n_columns: int):
+def column_shares(n_frames: int, n_columns: int,
+                  weights=None) -> tuple[int, ...]:
+    """Per-column frame counts for the deal.
+
+    ``weights=None``: the equal deal — every column the same padded
+    `column_frames` count (sum may exceed n_frames; the pad is trimmed).
+    With ``weights`` (n_columns non-negative finites, sum > 0): column d's
+    share is proportional to weights[d], quantized by largest-remainder
+    apportionment so the shares sum to EXACTLY n_frames — contiguous
+    frame runs cover every frame once with no overlap, and since frames
+    start on hop multiples every chunk boundary stays hop-aligned. A
+    zero-weight (cold/reserved) column gets zero frames.
+    """
+    assert n_columns >= 1, n_columns
+    if weights is None:
+        return (column_frames(n_frames, n_columns),) * n_columns
+    w = [float(x) for x in weights]
+    assert len(w) == n_columns, (len(w), n_columns)
+    assert all(x >= 0.0 and x == x and x != float("inf") for x in w), w
+    total = sum(w)
+    assert total > 0.0, "weights must not all be zero"
+    ideal = [n_frames * x / total for x in w]
+    base = [int(i) for i in ideal]
+    # hand the leftover frames to the largest fractional remainders
+    # (ties -> lower column index, so the deal is deterministic)
+    order = sorted(range(n_columns), key=lambda d: (base[d] - ideal[d], d))
+    for d in order[: n_frames - sum(base)]:
+        base[d] += 1
+    assert sum(base) == n_frames, (base, n_frames)
+    return tuple(base)
+
+
+def column_chunks(signal, window: int, hop: int, n_columns: int,
+                  weights=None):
     """Split a raw 1-D signal into per-column chunks on hop boundaries.
 
-    Returns `(chunks, n_frames)` where chunks is `(D, L)` with
-    `L = n_d*hop + window - hop`: row d starts at sample `d*n_d*hop` and
-    carries its `window-hop` right-halo (replicated from the neighbour's
-    first samples), zero-padded past the signal end — so row d frames to
-    exactly `n_d` windows, the ones frame-global indices
-    [d*n_d, (d+1)*n_d) would produce. `n_frames == 0` yields (None, 0).
+    Returns ``(chunks, n_frames, shares)``. ``chunks`` is `(D, L)` with
+    `L = max(shares)*hop + window - hop`: row d starts at the first
+    sample of its first owned frame (`offset_d*hop`, hop-aligned by
+    construction) and carries its `window-hop` right-halo (replicated
+    from the neighbour's first samples), zero-padded past the signal end
+    — so row d's first ``shares[d]`` framed windows are exactly the ones
+    frame-global indices [offset_d, offset_d + shares[d]) would produce.
+
+    With the equal deal (``weights=None``) every share is the same padded
+    `column_frames` count and rows frame to exactly that count — the PR-4
+    behaviour. With ``weights`` the shares are the non-uniform
+    `column_shares` deal (summing to n_frames exactly); rows are padded
+    to the widest share's length so shard_map shards agree on shape, and
+    a row's frames past its own share are discard-on-trim duplicates of
+    its neighbour's frames. `n_frames == 0` yields (None, 0, (0,)*D).
     """
     sig = jnp.asarray(signal)
     assert sig.ndim == 1, sig.shape
     n = stream_frame_count(sig.shape[0], window, hop)
     if n == 0:
-        return None, 0
-    n_d = column_frames(n, n_columns)
-    L = n_d * hop + (window - hop)
-    total = (n_columns - 1) * n_d * hop + L
+        return None, 0, (0,) * n_columns
+    shares = column_shares(n, n_columns, weights)
+    L = max(shares) * hop + (window - hop)
+    offsets = [sum(shares[:d]) for d in range(n_columns)]
+    total = max(off * hop + L for off in offsets)
     if total > sig.shape[0]:
         sig = jnp.concatenate(
             [sig, jnp.zeros((total - sig.shape[0],), sig.dtype)])
-    chunks = jnp.stack([sig[d * n_d * hop: d * n_d * hop + L]
-                        for d in range(n_columns)])
-    return chunks, n
+    chunks = jnp.stack([sig[off * hop: off * hop + L] for off in offsets])
+    return chunks, n, shares
 
 
 def _trim(out: dict, n: int) -> dict:
@@ -130,7 +184,7 @@ def pipeline_stream_sharded(signal, taps, w, b, *, window: int, hop: int,
                             n_columns: int, mesh=None, fft_size: int = 512,
                             interpret: bool = True,
                             block_frames: int | None = None,
-                            outputs: tuple = OUTPUTS):
+                            outputs: tuple = OUTPUTS, weights=None):
     """`pipeline_stream_pallas` dealt across `n_columns` column replicas.
 
     With `mesh` (a mesh whose `data` axis has >= n_columns devices... in
@@ -140,11 +194,22 @@ def pipeline_stream_sharded(signal, taps, w, b, *, window: int, hop: int,
     ~n_samples/D chunk + halo and runs the fused kernel on it. Without a
     mesh the same per-column body runs serially — identical outputs, so
     every equivalence property is testable on a single device.
+
+    ``weights`` switches the equal deal to the non-uniform
+    `column_shares` deal (load-aware: a slow column gets a small share).
+    On the serial fallback each column runs EXACTLY its own share — the
+    per-column wall times really are proportional to the deal, which is
+    what the `table5/stream_hetero` bench measures. Under shard_map the
+    shards stay shape-uniform (padded to the widest share; the pad frames
+    are discarded on trim), so a smaller share still cuts the loaded
+    column's staged bytes and valid output rows. Outputs are bit-identical
+    to the single-device kernel for ANY valid weight vector.
     """
     outputs = canonical_outputs(outputs)
     _check_mesh(mesh, n_columns)
     F, C = w.shape
-    chunks, n = column_chunks(signal, window, hop, n_columns)
+    chunks, n, shares = column_chunks(signal, window, hop, n_columns,
+                                      weights)
     if n == 0:
         return empty_outputs(window, F, C, jnp.asarray(signal).dtype,
                              outputs)
@@ -156,9 +221,27 @@ def pipeline_stream_sharded(signal, taps, w, b, *, window: int, hop: int,
     if mesh is not None:
         sharded = _stream_shard_fn(mesh, window, hop, fft_size, interpret,
                                    block_frames, outputs)
-        return _trim(sharded(chunks, taps, w, b), n)
-    # serial-column fallback: same deal, one device
-    outs = [body(chunks[d: d + 1], taps, w, b) for d in range(n_columns)]
+        out = sharded(chunks, taps, w, b)
+        if weights is None:
+            return _trim(out, n)
+        # non-uniform deal: every shard framed max(shares) rows; keep each
+        # column's own share and drop its pad rows
+        n_max = max(shares)
+        keep = [slice(d * n_max, d * n_max + s)
+                for d, s in enumerate(shares) if s]
+        return {k: jnp.concatenate([v[sl] for sl in keep])
+                for k, v in out.items()}
+    # serial-column fallback: same deal, one device. Non-uniform shares
+    # run each column on exactly its own share's samples (chunk rows are
+    # padded to the widest share; the slice undoes the pad) so serial
+    # per-column timing reflects the deal.
+    if weights is None:
+        outs = [body(chunks[d: d + 1], taps, w, b)
+                for d in range(n_columns)]
+    else:
+        outs = [body(chunks[d: d + 1, : s * hop + (window - hop)],
+                     taps, w, b)
+                for d, s in enumerate(shares) if s]
     return _trim({k: jnp.concatenate([o[k] for o in outs]) for k in outs[0]},
                  n)
 

@@ -9,7 +9,12 @@ integration tests.
 `ColumnScheduler` is the admission policy for the OTHER traffic class the
 repo serves — continuous biosignal streams: independent streams are placed
 on distinct column replicas (devices), the multi-tenant complement of
-sharding one stream across all columns (`StreamConfig.n_columns`).
+sharding one stream across all columns (`StreamConfig.n_columns`). With a
+`StreamTelemetry` attached it is load-aware: placement by least MEASURED
+windows/s (stream count is only the cold-start fallback), a `rebalance`
+work-stealing pass that re-pins streams when the max/min column-load
+ratio blows a threshold, and `deal_weights` feeding measured per-column
+rates into the non-uniform frame deal.
 """
 from __future__ import annotations
 
@@ -180,25 +185,46 @@ class Engine:
 
 class ColumnScheduler:
     """Admission placement of independent biosignal streams onto column
-    replicas (devices).
+    replicas (devices) — LOAD-AWARE when given telemetry.
 
     Two ways to use D columns: one heavy stream `shard_map`s each dispatch
     across all of them (`StreamConfig.n_columns=D`), or D independent
     streams each stay resident on ONE column — no cross-device halo, and
     per-column autotune winners stay valid because every column sees the
     single-column shape. This scheduler implements the second: `admit`
-    pins a new stream to the least-loaded column (ties broken by column
-    index, so an idle machine fills round-robin — the archsim pass deal),
-    `release` frees it on stream close.
+    pins a new stream to the least-loaded column, `release` frees it on
+    stream close.
 
-    >>> sched = ColumnScheduler()
+    "Least-loaded" is MEASURED when a `serve.stream.StreamTelemetry` is
+    attached and warm: a column's load is the sum of its streams' EWMA
+    windows/s, so a heavy sensor counts for what it actually consumes and
+    a cheap one barely counts — balancing by live-stream count only when
+    telemetry is cold (no inter-retire gap observed yet). Ties break by
+    stream count then column index, so an idle machine still fills
+    round-robin (the archsim pass deal).
+
+    `rebalance` is the periodic work-stealing step: when the max/min
+    column-load ratio exceeds ``rebalance_ratio`` it re-pins streams from
+    the most- to the least-loaded column (largest mover first, only while
+    a move strictly shrinks the spread) and returns the
+    ``{stream_id: new_device}`` moves for the caller to apply via
+    `BiosignalStream.repin`. `deal_weights` is the sharded-stream
+    complement: measured per-column throughput rates as a
+    `column_shares` weight vector (`StreamConfig.column_weights`), so a
+    column sharing its device with another tenant is dealt fewer frames.
+
+    >>> sched = ColumnScheduler(telemetry=StreamTelemetry())
     >>> stream = BiosignalStream(app, cfg, device=sched.admit("sensor-7"))
     """
 
-    def __init__(self, devices=None):
+    def __init__(self, devices=None, *, telemetry=None,
+                 rebalance_ratio: float = 2.0):
         self.devices = list(devices) if devices is not None \
             else list(jax.devices())
         assert self.devices, "no devices to schedule columns on"
+        assert rebalance_ratio >= 1.0, rebalance_ratio
+        self.telemetry = telemetry
+        self.rebalance_ratio = rebalance_ratio
         self._load = [0] * len(self.devices)
         self._placement: dict = {}
 
@@ -213,22 +239,144 @@ class ColumnScheduler:
         """Live-stream count per column (admission balance introspection)."""
         return list(self._load)
 
+    def _warm(self) -> bool:
+        return self.telemetry is not None and self.telemetry.warm
+
+    def _stream_weights(self) -> dict:
+        """Every placed stream's load contribution: its measured EWMA rate
+        when warm. A cold (not-yet-measured) stream counts the MEAN
+        warm-stream rate — the same unmeasured-is-not-zero substitution
+        as `deal_weights`; a unitless placeholder against windows/s loads
+        would make a burst of cold admissions nearly invisible and pile
+        them onto one column. Computed in one pass (the mean once, not
+        per stream)."""
+        rates = {s: (self.telemetry.stream_rate(s) if self.telemetry
+                     else 0.0) for s in self._placement}
+        warm = [r for r in rates.values() if r > 0.0]
+        mean = sum(warm) / len(warm) if warm else 1.0
+        return {s: (r if r > 0.0 else mean) for s, r in rates.items()}
+
+    def measured_loads(self) -> list[float] | None:
+        """Measured windows/s demand per column (sum of the column's
+        streams' EWMA rates, cold streams counted at the mean warm rate),
+        or None while telemetry is cold — callers then balance by stream
+        count."""
+        if not self._warm():
+            return None
+        loads = [0.0] * len(self.devices)
+        for sid, w in self._stream_weights().items():
+            loads[self._placement[sid]] += w
+        return loads
+
     def admit(self, stream_id):
         """Place a new stream; returns the device to pin it to
-        (`BiosignalStream(..., device=...)`)."""
+        (`BiosignalStream(..., device=...)`). Rate-based (least measured
+        load) when telemetry is warm, least-stream-count otherwise."""
         assert stream_id not in self._placement, \
             f"stream {stream_id!r} already placed"
-        col = min(range(len(self.devices)), key=lambda i: (self._load[i], i))
+        measured = self.measured_loads()
+        if measured is None:
+            col = min(range(len(self.devices)),
+                      key=lambda i: (self._load[i], i))
+        else:
+            col = min(range(len(self.devices)),
+                      key=lambda i: (measured[i], self._load[i], i))
         self._load[col] += 1
         self._placement[stream_id] = col
+        if self.telemetry is not None:
+            self.telemetry.attach(stream_id, col)
         return self.devices[col]
 
     def release(self, stream_id) -> None:
         self._load[self._placement.pop(stream_id)] -= 1
+        if self.telemetry is not None:
+            self.telemetry.detach(stream_id)
+
+    def _move(self, stream_id, col: int) -> None:
+        old = self._placement[stream_id]
+        self._load[old] -= 1
+        self._load[col] += 1
+        self._placement[stream_id] = col
+        if self.telemetry is not None:
+            self.telemetry.attach(stream_id, col)
+
+    def rebalance(self) -> dict:
+        """One work-stealing pass. While the max/min column-load ratio
+        exceeds ``rebalance_ratio`` (a zero-load column under a loaded one
+        counts as exceeded), move the heaviest stream that strictly
+        shrinks the max-min spread from the most- to the least-loaded
+        column. Returns {stream_id: new device}; apply with
+        `BiosignalStream.repin`."""
+        moves: dict = {}
+        for _ in range(len(self._placement) or 1):
+            loads = self.measured_loads()
+            if loads is None:
+                loads = [float(c) for c in self._load]
+            hi = max(range(len(loads)), key=lambda i: (loads[i], -i))
+            lo = min(range(len(loads)), key=lambda i: (loads[i], i))
+            if loads[hi] <= 0.0 or \
+                    (loads[lo] > 0.0 and
+                     loads[hi] / loads[lo] <= self.rebalance_ratio):
+                break
+            weights = self._stream_weights()
+            movers = sorted(
+                (s for s, c in self._placement.items() if c == hi),
+                key=weights.__getitem__, reverse=True)
+            pick = next((s for s in movers
+                         if loads[lo] + weights[s] < loads[hi]), None)
+            if pick is None:        # no move shrinks the spread
+                break
+            self._move(pick, lo)
+            moves[pick] = self.devices[lo]
+        return moves
+
+    def deal_weights(self, band: float = 0.0) -> tuple | None:
+        """Measured per-column throughput rates (the retire-rate EWMAs) as
+        a weight vector for the non-uniform deal
+        (`StreamConfig.column_weights` / `column_shares`), or None while
+        telemetry is cold. A column that never retired anything gets the
+        mean observed rate — unobserved is not the same as broken.
+
+        ``band`` is the deal's deadband (same thrash-guard idea as
+        ``rebalance_ratio``): columns whose measured rates differ by less
+        than ``band`` (relative, walked over the rate-sorted columns) are
+        considered EQUALLY capable and share their cluster's mean rate —
+        EWMA jitter between identical columns must not deal them unequal
+        shares; only a genuine rate gap wider than the band changes the
+        deal. 0 disables it."""
+        if self.telemetry is None:
+            return None
+        rates = [self.telemetry.column_rate(c)
+                 for c in range(len(self.devices))]
+        seen = [r for r in rates if r > 0.0]
+        if not seen:
+            return None
+        mean = sum(seen) / len(seen)
+        rates = [r if r > 0.0 else mean for r in rates]
+        if band > 0.0:
+            order = sorted(range(len(rates)), key=lambda c: rates[c])
+            clusters, cur = [], [order[0]]
+            for c in order[1:]:
+                if rates[c] <= rates[cur[0]] * (1.0 + band):
+                    cur.append(c)       # within the band of the cluster
+                else:                   # floor: same capability class
+                    clusters.append(cur)
+                    cur = [c]
+            clusters.append(cur)
+            for cl in clusters:
+                m = sum(rates[c] for c in cl) / len(cl)
+                for c in cl:
+                    rates[c] = m
+        return tuple(rates)
 
     def open_stream(self, app=None, cfg=None, *, stream_id):
         """Admit + construct in one call: a `BiosignalStream` whose every
-        dispatch is committed to the assigned column."""
+        dispatch is committed to the assigned column and (when the
+        scheduler carries telemetry) reports its retires to it."""
         from repro.serve.stream import BiosignalStream
 
-        return BiosignalStream(app, cfg, device=self.admit(stream_id))
+        device = self.admit(stream_id)
+        return BiosignalStream(app, cfg, device=device,
+                               telemetry=self.telemetry,
+                               stream_id=stream_id,
+                               column=self._placement[stream_id])

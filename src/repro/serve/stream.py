@@ -29,10 +29,23 @@ run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), and
 falls back to bit-identical serial column execution otherwise. Independent
 streams can instead be pinned to distinct columns via ``device=`` — that is
 what `serve.engine.ColumnScheduler` hands out.
+
+TELEMETRY: `StreamTelemetry` measures per-stream and per-column throughput
+(an EWMA of windows/s, updated on every batch retire — the moment
+`_collect` blocks until a dispatch's outputs are ready). The measurements
+are what make the runtime LOAD-AWARE: `serve.engine.ColumnScheduler`
+places new streams on the column with the least measured load (not just
+the fewest streams), its `rebalance` step re-pins streams when the
+max/min column-load ratio blows past a threshold, and `deal_weights`
+turns measured per-column rates into the non-uniform `column_shares`
+deal (`StreamConfig.column_weights`) — a column sharing its device with
+another tenant retires slower, so it is dealt proportionally fewer
+frames.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Iterator
 
@@ -62,6 +75,10 @@ class StreamConfig:
     depth: int = 1              # max in-flight batches (1 = classic double
     #                             buffer, the measured CPU winner; 2+ for
     #                             accelerators with wider dispatch gaps)
+    column_weights: tuple | None = None   # non-uniform deal weights (one
+    #                             per column, e.g. measured rates from
+    #                             StreamTelemetry / deal_weights); None =
+    #                             the equal deal
 
 
 # single source of the framing arithmetic (shared with the kernel, whose
@@ -95,6 +112,114 @@ def column_mesh(n_columns: int):
     return make_local_mesh(data=n_columns)
 
 
+@dataclasses.dataclass(frozen=True)
+class ColumnStats:
+    """One column's measured-throughput snapshot (see `StreamTelemetry`)."""
+    column: int
+    streams: int        # live streams attached to the column
+    windows: int        # total windows retired on the column
+    rate: float         # EWMA of the column's retire throughput, windows/s
+    load: float         # sum of the column's live streams' EWMA rates —
+    #                     the demand signal ColumnScheduler balances on
+
+
+class StreamTelemetry:
+    """Per-stream and per-column throughput telemetry.
+
+    Every batch retire (`BiosignalStream._collect`, the block-until-ready
+    point) reports ``(stream_id, n_windows)``; the telemetry turns the
+    inter-retire gap into an instantaneous windows/s sample and folds it
+    into an EWMA (``alpha`` = weight of the newest sample) per stream and
+    per column. The first retire of a stream/column only seeds the
+    timestamp — a rate needs a gap — so a telemetry with no *gap* yet is
+    COLD (`warm` is False) and schedulers fall back to counting streams.
+
+    ``clock`` is injectable (defaults to `time.perf_counter`) so tests
+    and benchmarks can replay measured timings deterministically.
+    """
+
+    def __init__(self, alpha: float = 0.3, clock=time.perf_counter):
+        assert 0.0 < alpha <= 1.0, alpha
+        self.alpha = alpha
+        self._clock = clock
+        self._stream_col: dict = {}       # stream_id -> column
+        self._stream_rate: dict = {}      # stream_id -> EWMA windows/s
+        self._stream_last: dict = {}      # stream_id -> last retire t
+        self._stream_windows: dict = {}   # stream_id -> total windows
+        self._col_rate: dict[int, float] = {}
+        self._col_last: dict[int, float] = {}
+        self._col_windows: dict[int, int] = {}
+
+    def attach(self, stream_id, column: int = 0) -> None:
+        """Register a stream on a column (idempotent re-attach moves it —
+        that is how a rebalance re-pin shows up here)."""
+        self._stream_col[stream_id] = int(column)
+        self._stream_rate.setdefault(stream_id, 0.0)
+        self._stream_windows.setdefault(stream_id, 0)
+
+    def detach(self, stream_id) -> None:
+        for d in (self._stream_col, self._stream_rate, self._stream_last,
+                  self._stream_windows):
+            d.pop(stream_id, None)
+
+    def column_of(self, stream_id) -> int:
+        return self._stream_col[stream_id]
+
+    @staticmethod
+    def _ewma(old: float | None, inst: float, alpha: float) -> float:
+        return inst if old is None or old == 0.0 else \
+            alpha * inst + (1.0 - alpha) * old
+
+    def record_retire(self, stream_id, n_windows: int) -> None:
+        """Fold one retired batch (``n_windows`` valid frames) into the
+        stream's and its column's EWMAs."""
+        if stream_id not in self._stream_col:
+            self.attach(stream_id)
+        t = self._clock()
+        col = self._stream_col[stream_id]
+        self._stream_windows[stream_id] += int(n_windows)
+        self._col_windows[col] = self._col_windows.get(col, 0) + int(n_windows)
+        last = self._stream_last.get(stream_id)
+        if last is not None and t > last:
+            inst = n_windows / (t - last)
+            self._stream_rate[stream_id] = self._ewma(
+                self._stream_rate.get(stream_id), inst, self.alpha)
+        self._stream_last[stream_id] = t
+        last_c = self._col_last.get(col)
+        if last_c is not None and t > last_c:
+            inst = n_windows / (t - last_c)
+            self._col_rate[col] = self._ewma(
+                self._col_rate.get(col), inst, self.alpha)
+        self._col_last[col] = t
+
+    @property
+    def warm(self) -> bool:
+        """True once ANY stream has a measured rate (>= 2 retires)."""
+        return any(r > 0.0 for r in self._stream_rate.values())
+
+    def stream_rate(self, stream_id) -> float:
+        return self._stream_rate.get(stream_id, 0.0)
+
+    def column_rate(self, column: int) -> float:
+        return self._col_rate.get(column, 0.0)
+
+    def column_load(self, column: int) -> float:
+        """Sum of the column's live streams' EWMA rates (demand)."""
+        return sum(self._stream_rate.get(s, 0.0)
+                   for s, c in self._stream_col.items() if c == column)
+
+    def column_stats(self, n_columns: int | None = None) -> list[ColumnStats]:
+        """Snapshot over columns 0..n-1 (default: every column seen)."""
+        cols = range(n_columns) if n_columns is not None else sorted(
+            set(self._col_windows) | set(self._stream_col.values()) or {0})
+        return [ColumnStats(
+            column=c,
+            streams=sum(1 for v in self._stream_col.values() if v == c),
+            windows=self._col_windows.get(c, 0),
+            rate=self.column_rate(c),
+            load=self.column_load(c)) for c in cols]
+
+
 class BiosignalStream:
     """Drives a continuous signal through the fused pipeline kernel in
     pipelined window batches (up to `cfg.depth` in flight).
@@ -106,10 +231,19 @@ class BiosignalStream:
     how the serving layer places independent streams on distinct columns —
     and is mutually exclusive with ``cfg.n_columns > 1`` (which spreads
     each dispatch of one stream across all columns).
+
+    ``telemetry`` (a `StreamTelemetry`) makes the stream report every
+    batch retire under ``stream_id`` on ``column`` — the measurements the
+    load-aware scheduler places and rebalances on. `repin` moves the
+    stream to another device mid-flight (a `ColumnScheduler.rebalance`
+    move); in-flight batches finish on the old device, later dispatches
+    go to the new one.
     """
 
     def __init__(self, app: BiosignalApp | None = None,
-                 cfg: StreamConfig | None = None, *, device=None):
+                 cfg: StreamConfig | None = None, *, device=None,
+                 telemetry: StreamTelemetry | None = None,
+                 stream_id=None, column: int = 0):
         self.app = app or make_app()
         cfg = cfg or StreamConfig()
         self.cfg = dataclasses.replace(
@@ -123,8 +257,33 @@ class BiosignalStream:
         assert self.cfg.depth >= 1
         assert device is None or self.cfg.n_columns == 1, \
             "pin a stream to one column OR shard it across columns, not both"
+        if self.cfg.column_weights is not None:
+            assert len(self.cfg.column_weights) == self.cfg.n_columns, \
+                (self.cfg.column_weights, self.cfg.n_columns)
+            assert self.cfg.framing == "kernel", \
+                "the load-aware deal is a raw-chunk (framing='kernel') path"
         self.device = device
         self.mesh = column_mesh(self.cfg.n_columns)
+        self.telemetry = telemetry
+        self.stream_id = stream_id if stream_id is not None else id(self)
+        self.column = column
+        if telemetry is not None:
+            telemetry.attach(self.stream_id, column)
+
+    def repin(self, device, column: int | None = None) -> None:
+        """Move the stream's future dispatches to another device (the
+        rebalance hand-off). Only meaningful for pinned (n_columns == 1)
+        streams, like ``device=`` itself. Pass ``column`` when repinning
+        MANUALLY so the telemetry re-attributes later retires to the new
+        column (`ColumnScheduler.rebalance` already re-attaches through
+        its own move bookkeeping, so its moves can omit it)."""
+        assert self.cfg.n_columns == 1, \
+            "repin applies to column-pinned streams"
+        self.device = device
+        if column is not None:
+            self.column = column
+            if self.telemetry is not None:
+                self.telemetry.attach(self.stream_id, column)
 
     @property
     def dispatch_windows(self) -> int:
@@ -148,7 +307,8 @@ class BiosignalStream:
                                    block_frames=cfg.block_rows,
                                    autotune=cfg.autotune,
                                    outputs=cfg.outputs,
-                                   n_columns=cfg.n_columns, mesh=self.mesh)
+                                   n_columns=cfg.n_columns, mesh=self.mesh,
+                                   column_weights=cfg.column_weights)
 
     def _dispatch_frames(self, frames):
         """Pre-framed dispatch (fallback/reference path)."""
@@ -202,9 +362,10 @@ class BiosignalStream:
         while inflight:
             yield self._collect(*inflight.popleft())
 
-    @staticmethod
-    def _collect(out: dict, valid: int) -> dict:
-        out = jax.block_until_ready(out)
+    def _collect(self, out: dict, valid: int) -> dict:
+        out = jax.block_until_ready(out)        # the batch retires HERE
+        if self.telemetry is not None:
+            self.telemetry.record_retire(self.stream_id, valid)
         return {k: v[:valid] for k, v in out.items()}
 
     def _empty(self, dtype) -> dict:

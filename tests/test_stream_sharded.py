@@ -106,8 +106,9 @@ def test_column_chunk_arithmetic():
     sig = np.arange(512 * 9, dtype=np.float32)
     n = frame_count(sig.shape[0], window, hop)
     n_d = column_frames(n, D)
-    chunks, n_out = column_chunks(sig, window, hop, D)
+    chunks, n_out, shares = column_chunks(sig, window, hop, D)
     assert n_out == n
+    assert shares == (n_d,) * D
     assert chunks.shape == (D, n_d * hop + window - hop)
     for d in range(D):
         start = d * n_d * hop
@@ -117,7 +118,7 @@ def test_column_chunk_arithmetic():
         assert (got[want.shape[0]:] == 0).all()     # zero-padded tail
         assert frame_count(got.shape[0], window, hop) == n_d
     # no-frame signal
-    assert column_chunks(sig[:100], window, hop, D) == (None, 0)
+    assert column_chunks(sig[:100], window, hop, D) == (None, 0, (0,) * D)
 
 
 def test_sharded_autotune_key_carries_device_count():
@@ -224,6 +225,13 @@ def test_shard_map_path_is_active_on_multidevice():
                                   mesh=mesh)
     ref = app_pipeline_stream(app, raw, window=512, hop=128)
     _assert_matches(out, ref)
+    # the non-uniform (load-aware) deal must be just as invisible under
+    # real shard_map, including a zero-weight column
+    out_w = pipeline_stream_sharded(raw, app.fir_taps, app.svm_w, app.svm_b,
+                                    window=512, hop=128, n_columns=8,
+                                    mesh=mesh,
+                                    weights=(1, 1, 2, 1, 0, 1, 1, 3))
+    _assert_matches(out_w, ref)
     # runtime plumbing picks the mesh up on its own
     cfg = StreamConfig(window=512, hop=128, batch_windows=2, n_columns=8)
     stream = BiosignalStream(app, cfg)
@@ -251,9 +259,10 @@ app = make_app()
 sig, _ = synthetic_respiration(1, 512 * 19 + 77, seed=42)
 raw = sig[0]
 ref = app_pipeline_stream(app, raw, window=512, hop=128)
-for d in (2, 8):
+for d, w in ((2, None), (8, None), (4, (1, 2, 0, 3))):
     out = app_pipeline_stream(app, raw, window=512, hop=128, n_columns=d,
-                              mesh=make_local_mesh(data=d))
+                              mesh=make_local_mesh(data=d),
+                              column_weights=w)
     np.testing.assert_array_equal(np.asarray(out["class"]),
                                   np.asarray(ref["class"]))
     err = float(np.abs(np.asarray(out["margin"]) -
