@@ -200,21 +200,28 @@ def _table_operands(taps, w, b, fft_size: int):
                 jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(ks))
     shapes = ((1, k), (stages, m // 2), (stages, m // 2), (2, m), (F, C),
               (1, C), lo.shape, hi.shape, ks.shape)
-    specs = [pl.BlockSpec(s, lambda i: (0, 0), memory_space=pltpu.VMEM)
+    # broadcast index_map takes *any* grid rank: the same tables serve the
+    # 1-D framed/stream grids and the 2-D ring grid
+    specs = [pl.BlockSpec(s, lambda *_: (0, 0), memory_space=pltpu.VMEM)
              for s in shapes]
     return operands, specs
 
 
 def _out_shapes_specs(R: int, S: int, F: int, C: int, rb: int, dtype,
-                      outputs: tuple):
+                      outputs: tuple, index_map=None):
+    """Output ShapeDtypeStructs + BlockSpecs for an R-row result written in
+    rb-row blocks. ``index_map`` defaults to the 1-D grid's row advance
+    (block i -> rows [i*rb, (i+1)*rb)); the ring entry passes the 2-D
+    (slot, block) -> flat-row map instead."""
     table = {
         "filtered": (jax.ShapeDtypeStruct((R, S), dtype), (rb, S)),
         "features": (jax.ShapeDtypeStruct((R, F), jnp.float32), (rb, F)),
         "margin": (jax.ShapeDtypeStruct((R, C), jnp.float32), (rb, C)),
         "class": (jax.ShapeDtypeStruct((R, 1), jnp.int32), (rb, 1)),
     }
+    imap = index_map if index_map is not None else lambda i: (i, 0)
     out_shape = tuple(table[o][0] for o in outputs)
-    out_specs = tuple(pl.BlockSpec(table[o][1], lambda i: (i, 0),
+    out_specs = tuple(pl.BlockSpec(table[o][1], imap,
                                    memory_space=pltpu.VMEM) for o in outputs)
     return out_shape, out_specs
 
@@ -405,3 +412,89 @@ def pipeline_stream_pallas(signal, taps, w, b, *, window: int, hop: int,
         interpret=interpret,
     )(*((sig2,) * (1 + n_tails)), *tables)
     return _as_output_dict(outs, outputs, n)
+
+
+# ---------------------------------------------------------------------------
+# Ring-chunk kernel: one pallas_call over a ring of raw-signal chunks
+# ---------------------------------------------------------------------------
+
+def ring_chunk_samples(window: int, hop: int, batch_windows: int) -> int:
+    """Samples per ring slot: one `batch_windows`-frame dispatch's span —
+    the same arithmetic as `serve.stream.BiosignalStream.chunk_samples`."""
+    return (batch_windows - 1) * hop + window
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "hop", "fft_size", "interpret",
+                                    "block_frames", "outputs"))
+def pipeline_ring_pallas(ring, taps, w, b, *, window: int, hop: int,
+                         fft_size: int = 512, interpret: bool = True,
+                         block_frames: int | None = None,
+                         outputs: tuple = OUTPUTS):
+    """Fused pipeline over a RING of raw-signal chunks in ONE `pallas_call`.
+
+    ``ring`` is `(ring_depth, span)`: each row is one dispatch-sized raw
+    chunk (what `pipeline_stream_pallas` takes one at a time — span =
+    `ring_chunk_samples(window, hop, batch_windows)` for a
+    `batch_windows`-frame slot). The grid is `(ring_depth, n_blocks)`:
+    the first axis advances the ring slot, the second reuses the
+    in-kernel framing index_maps of the single-chunk stream kernel
+    VERBATIM — body BlockSpec `(r, j) -> (r, j)` is block j of slot r's
+    hop arithmetic, the `window-hop` tail specs read the same row
+    `j*rb + rb + i` hop-blocks ahead, and `pipeline_stream_kernel` is the
+    kernel body unchanged. This is the kernel half of the device-resident
+    streaming loop (`serve/resident.py`): a whole ring of batches
+    advances frame-blocks inside one compiled dispatch, no host round
+    trip between slots.
+
+    Returns the `pipeline_stream_pallas` output dict per slot, stacked:
+    each value has leading shape `(ring_depth, frames_per_slot)` and row r
+    is bit-identical to `pipeline_stream_pallas(ring[r], ...)` — the
+    property `tests/test_resident.py` pins.
+    """
+    outputs = canonical_outputs(outputs)
+    D, span = ring.shape
+    k = int(taps.shape[0])
+    F, C = w.shape
+    assert window >= fft_size, (window, fft_size)
+    assert 0 < hop <= window, (hop, window)
+    n = stream_frame_count(span, window, hop)      # frames per ring slot
+    assert n > 0, f"ring span {span} shorter than one {window}-window"
+    rb = resolve_stream_block_frames(n, window, hop, block_frames)
+    n_blocks = -(-n // rb)
+    L = rb * hop                     # body chunk: one block's sample stride
+    n_tails = min_stream_block_frames(window, hop) if window > hop else 0
+    # pad every slot row to the block tiling (same hop-granular arithmetic
+    # as the single-chunk entry; the pad frames are trimmed per slot)
+    total = -(-(n_blocks * rb + n_tails) // rb) * L
+    if total > span:
+        ring = jnp.concatenate(
+            [ring, jnp.zeros((D, total - span), ring.dtype)], axis=1)
+    else:
+        ring = ring[:, :total]
+    in_specs = [pl.BlockSpec((1, L), lambda r, j: (r, j),
+                             memory_space=pltpu.VMEM)]
+    for i in range(n_tails):         # the SAME slot row, i hop-blocks ahead
+        in_specs.append(pl.BlockSpec(
+            (1, hop), lambda r, j, i=i: (r, j * rb + rb + i),
+            memory_space=pltpu.VMEM))
+    tables, table_specs = _table_operands(taps, w, b, fft_size)
+    out_shape, out_specs = _out_shapes_specs(
+        D * n_blocks * rb, window, F, C, rb, ring.dtype, outputs,
+        index_map=lambda r, j: (r * n_blocks + j, 0))
+    outs = pl.pallas_call(
+        functools.partial(pipeline_stream_kernel, n_taps=k,
+                          fft_size=fft_size, window=window, hop=hop,
+                          block_frames=rb, outputs=outputs,
+                          n_tails=n_tails),
+        out_shape=out_shape,
+        in_specs=in_specs + table_specs,
+        out_specs=out_specs,
+        grid=(D, n_blocks),
+        interpret=interpret,
+    )(*((ring,) * (1 + n_tails)), *tables)
+    res = _as_output_dict(outs, outputs, D * n_blocks * rb)
+    # per-slot trim: every slot framed n_blocks*rb rows, keep its n real
+    # frames and restore the (ring_depth, n, ...) slot structure
+    return {key: v.reshape((D, n_blocks * rb) + v.shape[1:])[:, :n]
+            for key, v in res.items()}

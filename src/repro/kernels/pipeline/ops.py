@@ -17,14 +17,17 @@ import jax
 
 from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
                                            pipeline_pallas,
+                                           pipeline_ring_pallas,
                                            pipeline_stream_pallas,
+                                           ring_chunk_samples,
                                            stream_frame_count)
 from repro.kernels.pipeline.shard import (column_shares, pipeline_sharded,
                                           pipeline_stream_sharded)
 
 __all__ = ["OUTPUTS", "canonical_outputs", "biosignal_pipeline",
-           "biosignal_pipeline_stream", "app_pipeline",
-           "app_pipeline_stream"]
+           "biosignal_pipeline_stream", "biosignal_pipeline_ring",
+           "app_pipeline", "app_pipeline_stream", "app_pipeline_ring",
+           "ring_chunk_samples"]
 
 
 def _interpret() -> bool:
@@ -120,6 +123,22 @@ def biosignal_pipeline_stream(signal, taps, w, b, *, window: int, hop: int,
                     block_frames=block_frames, outputs=outputs)
 
 
+def biosignal_pipeline_ring(ring, taps, w, b, *, window: int, hop: int,
+                            fft_size: int = 512,
+                            block_frames: int | None = None,
+                            outputs=None):
+    """Run the pipeline over a `(ring_depth, span)` RING of raw chunks in
+    one fused `pallas_call` — the kernel entry the device-resident loop
+    (`serve/resident.py`) dispatches per sweep. Each ring slot frames
+    in-kernel exactly like `biosignal_pipeline_stream` on that slot's
+    chunk; slot r of the result is bit-identical to the single-chunk call
+    on `ring[r]`. See `docs/ARCHITECTURE.md` (serving control loop)."""
+    outputs = canonical_outputs(outputs)
+    return pipeline_ring_pallas(ring, taps, w, b, window=window, hop=hop,
+                                fft_size=fft_size, interpret=_interpret(),
+                                block_frames=block_frames, outputs=outputs)
+
+
 def app_pipeline(app, signal, *, block_rows: int | None = None,
                  autotune: bool = False, outputs=None, n_columns: int = 1,
                  mesh=None):
@@ -144,3 +163,14 @@ def app_pipeline_stream(app, signal, *, window: int, hop: int,
                                      autotune=autotune, outputs=outputs,
                                      n_columns=n_columns, mesh=mesh,
                                      column_weights=column_weights)
+
+
+def app_pipeline_ring(app, ring, *, window: int, hop: int,
+                      block_frames: int | None = None, outputs=None):
+    """Fused ring-of-chunks execution of a `BiosignalApp` (one
+    `pallas_call` per ring sweep — the device-resident loop's dispatch)."""
+    return biosignal_pipeline_ring(ring, app.fir_taps, app.svm_w, app.svm_b,
+                                   window=window, hop=hop,
+                                   fft_size=app.fft_size,
+                                   block_frames=block_frames,
+                                   outputs=outputs)

@@ -204,6 +204,14 @@ def pipeline_stream_sharded(signal, taps, w, b, *, window: int, hop: int,
     are discarded on trim), so a smaller share still cuts the loaded
     column's staged bytes and valid output rows. Outputs are bit-identical
     to the single-device kernel for ANY valid weight vector.
+
+    Invariants: every chunk boundary is HOP-ALIGNED (frames start on hop
+    multiples, so the deal never splits a frame) and the chunk FIR's
+    frame-local transient patch makes each frame independent of where
+    the signal was cut — the two facts that make the deal numerically
+    invisible. See `docs/ARCHITECTURE.md` (column replication) for the
+    paper mapping and `docs/BENCHMARKS.md` for the `--check-columns` /
+    `--check-hetero` gates this entry backs.
     """
     outputs = canonical_outputs(outputs)
     _check_mesh(mesh, n_columns)

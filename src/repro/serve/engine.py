@@ -203,30 +203,55 @@ class ColumnScheduler:
     stream count then column index, so an idle machine still fills
     round-robin (the archsim pass deal).
 
-    `rebalance` is the periodic work-stealing step: when the max/min
-    column-load ratio exceeds ``rebalance_ratio`` it re-pins streams from
-    the most- to the least-loaded column (largest mover first, only while
-    a move strictly shrinks the spread) and returns the
+    `rebalance` is the work-stealing step: when the max/min column-load
+    ratio exceeds ``rebalance_ratio`` it re-pins streams from the most-
+    to the least-loaded column (largest mover first, only while a move
+    strictly shrinks the spread) and returns the
     ``{stream_id: new_device}`` moves for the caller to apply via
     `BiosignalStream.repin`. `deal_weights` is the sharded-stream
     complement: measured per-column throughput rates as a
     `column_shares` weight vector (`StreamConfig.column_weights`), so a
     column sharing its device with another tenant is dealt fewer frames.
 
-    >>> sched = ColumnScheduler(telemetry=StreamTelemetry())
+    RETIRE-COUNT TRIGGER: pass ``rebalance_every=N`` (windows) and the
+    scheduler subscribes to its telemetry's retire feed
+    (`StreamTelemetry.add_retire_listener`) — `rebalance` then runs BY
+    ITSELF once N windows have retired fleet-wide since the last pass,
+    instead of a host-side poller calling it on a timer. The trigger
+    consumes whatever the telemetry sees: per-batch retires from the
+    host-driven path or counter DRAINS from the device-resident loop
+    (`serve.resident.ResidentStream` — each drain reports the windows
+    retired on-device since the previous drain), so moving the steady
+    state on-device keeps the closed loop closed. Triggered moves queue
+    in ``pending_moves``; drain them with `pop_moves` and apply via
+    `BiosignalStream.repin`. See `docs/ARCHITECTURE.md`
+    (serving-runtime control loop).
+
+    >>> sched = ColumnScheduler(telemetry=StreamTelemetry(),
+    ...                         rebalance_every=256)
     >>> stream = BiosignalStream(app, cfg, device=sched.admit("sensor-7"))
+    >>> ...  # retires accumulate; sched.pop_moves() hands back any re-pins
     """
 
     def __init__(self, devices=None, *, telemetry=None,
-                 rebalance_ratio: float = 2.0):
+                 rebalance_ratio: float = 2.0,
+                 rebalance_every: int | None = None):
         self.devices = list(devices) if devices is not None \
             else list(jax.devices())
         assert self.devices, "no devices to schedule columns on"
         assert rebalance_ratio >= 1.0, rebalance_ratio
+        assert rebalance_every is None or rebalance_every >= 1
         self.telemetry = telemetry
         self.rebalance_ratio = rebalance_ratio
+        self.rebalance_every = rebalance_every
+        self.pending_moves: dict = {}
+        self._retired_since_rebalance = 0
         self._load = [0] * len(self.devices)
         self._placement: dict = {}
+        if rebalance_every is not None:
+            assert telemetry is not None, \
+                "the retire-count trigger needs a telemetry retire feed"
+            telemetry.add_retire_listener(self._on_retire)
 
     @property
     def n_columns(self) -> int:
@@ -299,6 +324,26 @@ class ColumnScheduler:
         self._placement[stream_id] = col
         if self.telemetry is not None:
             self.telemetry.attach(stream_id, col)
+
+    def _on_retire(self, stream_id, n_windows: int) -> None:
+        """Telemetry retire listener: accumulate retired windows and run
+        the work-stealing pass once ``rebalance_every`` of them landed —
+        the retire-count trigger that replaces a host-side poller. Only
+        streams this scheduler placed count toward the trigger (a foreign
+        stream sharing the telemetry is not this scheduler's load)."""
+        if stream_id not in self._placement:
+            return
+        self._retired_since_rebalance += n_windows
+        if self._retired_since_rebalance >= self.rebalance_every:
+            self._retired_since_rebalance = 0
+            self.pending_moves.update(self.rebalance())
+
+    def pop_moves(self) -> dict:
+        """Drain the retire-triggered re-pins: {stream_id: new device},
+        empty when the trigger hasn't fired (or found nothing to move).
+        Callers apply each with `BiosignalStream.repin`."""
+        moves, self.pending_moves = self.pending_moves, {}
+        return moves
 
     def rebalance(self) -> dict:
         """One work-stealing pass. While the max/min column-load ratio

@@ -41,6 +41,15 @@ turns measured per-column rates into the non-uniform `column_shares`
 deal (`StreamConfig.column_weights`) — a column sharing its device with
 another tenant retires slower, so it is dealt proportionally fewer
 frames.
+
+DEVICE-RESIDENT MODE: this module's dispatch loop is host-driven — one
+Python round trip per batch, kept as the REFERENCE path. The steady-state
+sibling lives in `serve/resident.py` (`ResidentStream`, reachable from
+here via `BiosignalStream.process_resident`): a `lax.scan` iterates ring
+sweeps of the donated signal buffer inside one compiled computation and
+drains the retire counters into the same `StreamTelemetry` at a low,
+configurable frequency. Outputs are bit-identical to this path.
+`docs/ARCHITECTURE.md` shows both control loops side by side.
 """
 from __future__ import annotations
 
@@ -63,6 +72,21 @@ from repro.kernels.pipeline.ops import (OUTPUTS, app_pipeline,
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
+    """Shape + policy of one stream's dispatches (shared verbatim by the
+    host-driven `BiosignalStream` and the device-resident
+    `serve.resident.ResidentStream`; the resident loop's own knobs live
+    in `serve.resident.ResidentConfig`).
+
+    Invariants the runtimes assert: ``window >= app.fft_size`` (stage 4
+    reads the first fft_size samples of each frame), ``0 < hop <=
+    window`` (frames advance by whole hops; every chunk/deal boundary in
+    the kernel and the multi-column split is HOP-ALIGNED, which is what
+    makes raw-chunk feeds bit-identical to host framing), and
+    ``column_weights`` — when set — has exactly ``n_columns`` entries and
+    requires ``framing="kernel"``. See `docs/ARCHITECTURE.md` (paper →
+    code map) for how these knobs correspond to VWR2A's column/VWR
+    geometry.
+    """
     window: int = 2048          # samples per frame (the processing window)
     hop: int = 512              # frame stride; < window => overlapping frames
     batch_windows: int = 8      # frames per fused-kernel dispatch PER COLUMN
@@ -136,6 +160,15 @@ class StreamTelemetry:
 
     ``clock`` is injectable (defaults to `time.perf_counter`) so tests
     and benchmarks can replay measured timings deterministically.
+
+    Retires arrive from BOTH serving modes: the host-driven path reports
+    one per batch (`BiosignalStream._collect`), the device-resident path
+    one per counter drain (`serve.resident.ResidentStream._drain` — the
+    windows retired since the previous drain, so totals match the
+    per-batch accounting exactly). ``add_retire_listener`` lets a
+    consumer observe every retire as it lands — that is how
+    `serve.engine.ColumnScheduler`'s retire-count rebalance trigger
+    replaces a host-side poller.
     """
 
     def __init__(self, alpha: float = 0.3, clock=time.perf_counter):
@@ -149,6 +182,15 @@ class StreamTelemetry:
         self._col_rate: dict[int, float] = {}
         self._col_last: dict[int, float] = {}
         self._col_windows: dict[int, int] = {}
+        self._listeners: list = []        # fns called (stream_id, n) per
+        #                                   retire, AFTER the EWMA update
+
+    def add_retire_listener(self, fn) -> None:
+        """Register ``fn(stream_id, n_windows)`` to run on every recorded
+        retire (after the EWMA fold, so the listener sees warm rates).
+        The hook is how retire-count triggers subscribe —
+        `ColumnScheduler(rebalance_every=...)` registers itself here."""
+        self._listeners.append(fn)
 
     def attach(self, stream_id, column: int = 0) -> None:
         """Register a stream on a column (idempotent re-attach moves it —
@@ -172,7 +214,9 @@ class StreamTelemetry:
 
     def record_retire(self, stream_id, n_windows: int) -> None:
         """Fold one retired batch (``n_windows`` valid frames) into the
-        stream's and its column's EWMAs."""
+        stream's and its column's EWMAs, then notify retire listeners.
+        In resident mode a "batch" is one counter drain — the delta since
+        the previous drain."""
         if stream_id not in self._stream_col:
             self.attach(stream_id)
         t = self._clock()
@@ -191,6 +235,8 @@ class StreamTelemetry:
             self._col_rate[col] = self._ewma(
                 self._col_rate.get(col), inst, self.alpha)
         self._col_last[col] = t
+        for fn in self._listeners:
+            fn(stream_id, int(n_windows))
 
     @property
     def warm(self) -> bool:
@@ -238,6 +284,18 @@ class BiosignalStream:
     stream to another device mid-flight (a `ColumnScheduler.rebalance`
     move); in-flight batches finish on the old device, later dispatches
     go to the new one.
+
+    Args: ``app`` — the `core.biosignal.BiosignalApp` whose taps/weights
+    the kernel stages (default `make_app()`); ``cfg`` — the
+    `StreamConfig` dispatch shape (see its invariants). Guarantees:
+    `process` equals running the fused kernel on
+    `frame_signal(signal, window, hop)` in one call — bit-identical
+    across framing modes, column counts, batch sizes, AND the
+    device-resident mode (`process_resident`); the zero-frame degenerate
+    path returns the same keys/dtypes as the hot path. The control-loop
+    structure (what runs on host vs device) is diagrammed in
+    `docs/ARCHITECTURE.md`; the CI gates pinning the speedups are in
+    `docs/BENCHMARKS.md`.
     """
 
     def __init__(self, app: BiosignalApp | None = None,
@@ -267,6 +325,7 @@ class BiosignalStream:
         self.telemetry = telemetry
         self.stream_id = stream_id if stream_id is not None else id(self)
         self.column = column
+        self._resident = None       # lazy ResidentStream sibling (cached)
         if telemetry is not None:
             telemetry.attach(self.stream_id, column)
 
@@ -382,3 +441,23 @@ class BiosignalStream:
             return self._empty(jnp.asarray(signal).dtype)
         return {k: jnp.concatenate([c[k] for c in chunks], axis=0)
                 for k in chunks[0]}
+
+    def process_resident(self, signal, rcfg=None) -> dict:
+        """`process`, but with the steady-state loop ON-DEVICE: delegates
+        to a cached `serve.resident.ResidentStream` sharing this stream's
+        app, config, column pin, telemetry, and stream_id. Outputs are
+        bit-identical to `process`; telemetry sees counter drains (every
+        ``rcfg.drain_interval`` ring sweeps) instead of per-batch
+        retires. ``rcfg`` is a `serve.resident.ResidentConfig` (default:
+        its defaults). Only valid for single-column streams — the same
+        constraint the resident loop asserts."""
+        from repro.serve.resident import ResidentConfig, ResidentStream
+
+        rcfg = rcfg or ResidentConfig()
+        if self._resident is None or self._resident.rcfg != rcfg or \
+                self._resident.device is not self.device:
+            self._resident = ResidentStream(
+                self.app, self.cfg, rcfg, device=self.device,
+                telemetry=self.telemetry, stream_id=self.stream_id,
+                column=self.column)
+        return self._resident.process(signal)

@@ -1,0 +1,58 @@
+"""Doc-sync: every `file.py` / `file.py:symbol` reference in docs/ and
+README.md must resolve against the tree — the same check the CI lint job
+runs via `tools/check_docs.py`. Plus negative coverage so the checker
+itself can't silently rot into a yes-machine."""
+import importlib.util
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", ROOT / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_repo_docs_are_in_sync(capsys):
+    mod = _load_checker()
+    assert mod.main([]) == 0, capsys.readouterr().err
+
+
+def test_checker_flags_broken_references(tmp_path, monkeypatch):
+    mod = _load_checker()
+    doc = tmp_path / "bad.md"
+    doc.write_text(
+        "See `serve/stream.py:BiosignalStream` (real) but also\n"
+        "`serve/no_such_module.py` and `serve/stream.py:NoSuchClass`\n"
+        "and a [dead link](missing_page.md).\n")
+    errors = mod.check_file(doc.resolve())
+    msgs = "\n".join(errors)
+    assert len(errors) == 3, msgs
+    assert "no_such_module.py" in msgs
+    assert "NoSuchClass" in msgs
+    assert "missing_page.md" in msgs
+
+
+def test_checker_symbol_resolution():
+    mod = _load_checker()
+    src = ("CONST = 3\n"
+           "class Foo:\n"
+           "    bar: int = 1\n"
+           "    def baz(self):\n"
+           "        pass\n")
+    assert mod.symbol_defined(src, "CONST")
+    assert mod.symbol_defined(src, "Foo")
+    assert mod.symbol_defined(src, "Foo.baz")
+    assert mod.symbol_defined(src, "Foo.bar")
+    assert not mod.symbol_defined(src, "Foo.qux")
+    assert not mod.symbol_defined(src, "missing")
+
+
+def test_checker_cli_exit_codes():
+    mod = _load_checker()
+    assert mod.main(["README.md"]) == 0
+    assert mod.main(["docs"]) == 0
+    assert mod.main(["no/such/dir"]) == 2

@@ -1,0 +1,252 @@
+"""Device-resident streaming loop: the on-device `lax.scan` steady state
+must be BIT-identical to the host-driven per-batch reference for every
+(n_frames, ring_depth) — dividing or not — and its drained telemetry
+counters must match the per-batch retire accounting exactly, including
+the zero-frame and tail-pad cases. Also covers the ring kernel's
+slot-equivalence, the retire-count rebalance trigger, and the ring-depth
+autotune path."""
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.biosignal import make_app, synthetic_respiration
+from repro.kernels.pipeline.ops import (app_pipeline_ring,
+                                        app_pipeline_stream)
+from repro.serve.engine import ColumnScheduler
+from repro.serve.resident import (ResidentConfig, ResidentStream,
+                                  ring_chunk_samples)
+from repro.serve.stream import (BiosignalStream, StreamConfig,
+                                StreamTelemetry, frame_count)
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+def _signal(n_samples, seed=0):
+    sig, _ = synthetic_respiration(1, n_samples, seed=seed)
+    return sig[0]
+
+
+def _assert_identical(out, ref):
+    assert sorted(out) == sorted(ref)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]), err_msg=k)
+
+
+# ------------------------------------------------------------ ring kernel
+
+@pytest.mark.parametrize("window,hop,bw,depth", [
+    (512, 128, 4, 3),       # deep overlap, odd ring depth
+    (512, 512, 2, 2),       # hop == window: no tail specs at all
+    (1024, 320, 3, 4),      # hop does not divide window
+])
+def test_ring_kernel_matches_per_chunk(window, hop, bw, depth):
+    """One (slot, block)-grid ring dispatch == `depth` independent
+    per-chunk dispatches, to the last bit (the kernel body is shared)."""
+    app = make_app()
+    span = ring_chunk_samples(window, hop, bw)
+    stride = bw * hop
+    sig = _signal((depth - 1) * stride + span, seed=window + depth)
+    ring = np.stack([np.asarray(sig[r * stride: r * stride + span])
+                     for r in range(depth)])
+    out = app_pipeline_ring(app, ring, window=window, hop=hop)
+    for r in range(depth):
+        ref = app_pipeline_stream(app, ring[r], window=window, hop=hop)
+        for k in ref:
+            assert out[k].shape == (depth,) + ref[k].shape, (k, out[k].shape)
+            np.testing.assert_array_equal(
+                np.asarray(out[k][r]),
+                np.asarray(ref[k]), err_msg=f"slot {r} key {k}")
+
+
+# ---------------------------------------------------- resident == host
+
+CASES = [
+    # (window, hop, batch_windows, ring_depth, n_samples) — the sweep
+    # crosses dividing and non-dividing n_batches/ring_depth, hop==window,
+    # non-dividing hop, and the rd > n_batches degenerate
+    (512, 128, 4, 2, 128 * 32 + 512),        # n_batches divides ring depth
+    (512, 128, 4, 3, 128 * 29 + 77),         # ragged tail, non-dividing rd
+    (512, 512, 3, 2, 512 * 5 + 11),          # hop == window, odd frames
+    (1024, 320, 2, 4, 320 * 9 + 1024 + 5),   # hop does not divide window
+    (2048, 512, 8, 4, 512 * 40 + 2048),      # the paper-default shape
+    (512, 256, 4, 8, 256 * 3 + 512),         # ring deeper than the signal
+]
+
+
+@pytest.mark.parametrize("window,hop,bw,rd,n_samples", CASES)
+def test_resident_matches_host(window, hop, bw, rd, n_samples):
+    app = make_app()
+    sig = _signal(n_samples, seed=hop + rd)
+    cfg = StreamConfig(window=window, hop=hop, batch_windows=bw)
+    ref = BiosignalStream(app, cfg).process(sig)
+    out = ResidentStream(app, cfg, ResidentConfig(ring_depth=rd)).process(sig)
+    n = frame_count(n_samples, window, hop)
+    assert out["class"].shape == (n,)
+    _assert_identical(out, ref)
+
+
+def test_resident_zero_frames():
+    """A signal shorter than one window: same degenerate contract as the
+    host path — canonical empty dict, no retires, no drains."""
+    app = make_app()
+    cfg = StreamConfig(window=512, hop=256, batch_windows=4)
+    tel = StreamTelemetry(clock=VirtualClock())
+    rs = ResidentStream(app, cfg, telemetry=tel, stream_id="cold")
+    out = rs.process(np.zeros(100, np.float32))
+    ref = BiosignalStream(app, cfg).process(np.zeros(100, np.float32))
+    _assert_identical(out, ref)
+    assert all(v.shape[0] == 0 for v in out.values())
+    assert rs.last_drains == []
+    assert tel.column_stats(1)[0].windows == 0
+
+
+def test_process_resident_entry_point():
+    """`BiosignalStream.process_resident` == `process`, and the lazy
+    `ResidentStream` sibling is cached across calls."""
+    app = make_app()
+    sig = _signal(128 * 40 + 512, seed=3)
+    bs = BiosignalStream(app, StreamConfig(window=512, hop=128,
+                                           batch_windows=4))
+    rcfg = ResidentConfig(ring_depth=2)
+    _assert_identical(bs.process_resident(sig, rcfg), bs.process(sig))
+    first = bs._resident
+    bs.process_resident(sig, rcfg)
+    assert bs._resident is first            # same rcfg -> cached sibling
+    bs.process_resident(sig, ResidentConfig(ring_depth=4))
+    assert bs._resident is not first        # new rcfg -> rebuilt
+
+
+# ------------------------------------------------------- drain accounting
+
+@pytest.mark.parametrize("drain_interval", [1, 2, 3, 7])
+@pytest.mark.parametrize("window,hop,bw,rd,n_samples", [
+    (512, 128, 4, 2, 128 * 32 + 512),
+    (512, 256, 3, 3, 256 * 20 + 99),        # ragged tail batch
+    (512, 512, 2, 2, 512 * 5),              # exact cover, no pad
+])
+def test_drain_totals_match_host_accounting(drain_interval, window, hop,
+                                            bw, rd, n_samples):
+    """Counters drained every k sweeps must sum to EXACTLY what the
+    per-batch host path reports retire-by-retire: same total windows,
+    tail-pad frames never counted, final drain always lands."""
+    app = make_app()
+    sig = _signal(n_samples, seed=drain_interval)
+    cfg = StreamConfig(window=window, hop=hop, batch_windows=bw)
+    n = frame_count(n_samples, window, hop)
+
+    host_tel = StreamTelemetry(clock=VirtualClock())
+    host = BiosignalStream(app, cfg, telemetry=host_tel, stream_id="h")
+    host.process(sig)
+
+    res_tel = StreamTelemetry(clock=VirtualClock())
+    drains = []
+    res_tel.add_retire_listener(lambda sid, nw: drains.append(nw))
+    rs = ResidentStream(app, cfg,
+                        ResidentConfig(ring_depth=rd,
+                                       drain_interval=drain_interval),
+                        telemetry=res_tel, stream_id="r")
+    rs.process(sig)
+
+    assert sum(drains) == n
+    assert res_tel.column_stats(1)[0].windows == \
+        host_tel.column_stats(1)[0].windows == n
+    # cumulative snapshots: monotone, end at the full frame count
+    assert rs.last_drains == sorted(rs.last_drains)
+    assert rs.last_drains[-1] == n
+    # drain COUNT: one per full interval plus the forced final drain
+    n_batches = -(-n // bw)
+    n_sweeps = -(-n_batches // rd)
+    expect = max(1, n_sweeps // drain_interval +
+                 (1 if n_sweeps % drain_interval else 0))
+    assert len(drains) == expect
+
+
+# --------------------------------------------------- retire-count trigger
+
+def test_retire_trigger_feeds_on_drains():
+    """The scheduler's retire-count trigger consumes resident-mode drains
+    exactly like per-batch retires — no host poller anywhere."""
+    clock = VirtualClock()
+    tel = StreamTelemetry(clock=clock)
+    sched = ColumnScheduler(devices=[None], telemetry=tel,
+                            rebalance_every=10 ** 9)
+    device = sched.admit("res-stream")
+    assert device is None                   # the placeholder column
+    app = make_app()
+    cfg = StreamConfig(window=512, hop=256, batch_windows=4)
+    sig = _signal(256 * 24 + 512, seed=5)
+    rs = ResidentStream(app, cfg, ResidentConfig(ring_depth=2,
+                                                 drain_interval=2),
+                        telemetry=tel, stream_id="res-stream")
+    rs.process(sig)
+    n = frame_count(sig.shape[0], 512, 256)
+    assert sched._retired_since_rebalance == n
+
+
+def test_retire_trigger_rebalances_and_queues_moves():
+    clock = VirtualClock()
+    tel = StreamTelemetry(clock=clock)
+    sched = ColumnScheduler(devices=["d0", "d1"], telemetry=tel,
+                            rebalance_every=60)
+    for sid in ("s1", "s2", "s3"):
+        sched.admit(sid)                    # round-robin: s1,s3 -> col0
+    assert sched.column_of("s3") == 0
+    # warm the rates: s1 and s3 are heavy (10 windows per tick), s2 light
+    for _ in range(6):
+        clock.advance(1.0)
+        tel.record_retire("s1", 10)
+        tel.record_retire("s3", 10)
+        tel.record_retire("s2", 1)
+    # the trigger fired mid-loop (>= 60 windows retired) and queued the
+    # work-stealing move off the overloaded column 0
+    moves = sched.pop_moves()
+    assert moves, "retire-count trigger never rebalanced"
+    assert set(moves.values()) <= {"d0", "d1"}
+    assert sched.pop_moves() == {}          # drained
+    # a foreign stream sharing the telemetry never counts
+    before = sched._retired_since_rebalance
+    tel.record_retire("not-mine", 500)
+    assert sched._retired_since_rebalance == before
+
+
+# ------------------------------------------------------- ring-depth tuning
+
+def test_candidate_ring_depths():
+    assert autotune.candidate_ring_depths(1) == [1]
+    for n in (2, 3, 5, 16, 40):
+        cands = autotune.candidate_ring_depths(n)
+        assert cands and cands == sorted(cands, reverse=True)
+        assert all(d & (d - 1) == 0 and d <= n for d in cands)
+        assert len(cands) <= 4
+        # depth 1 survives the top-4 cut whenever there's room for it
+        assert 1 in cands or len(cands) == 4
+
+
+def test_resident_autotune_matches_host():
+    """The measured ring depth is a pure perf knob: whatever wins, the
+    outputs stay bit-identical and the winner is cached per shape."""
+    autotune.clear_cache()
+    try:
+        app = make_app()
+        cfg = StreamConfig(window=512, hop=256, batch_windows=2)
+        sig = _signal(256 * 15 + 512, seed=11)
+        ref = BiosignalStream(app, cfg).process(sig)
+        rs = ResidentStream(app, cfg, ResidentConfig(autotune=True))
+        _assert_identical(rs.process(sig), ref)
+        cache = autotune.cache_snapshot()
+        assert any(k[0] == "resident_ring" for k in cache)
+        rs.process(sig)                     # second call: cache hit
+        assert autotune.cache_snapshot() == cache
+    finally:
+        autotune.clear_cache()
