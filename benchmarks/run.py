@@ -66,6 +66,19 @@ def main() -> None:
                     metavar="R", help="--check-resident threshold "
                     "(default 1.0: resident must not lose to per-batch "
                     "dispatch)")
+    ap.add_argument("--check-fault", action="store_true",
+                    help="fail unless killing one of D=4 columns mid-run "
+                         "(*/stream_fault_recovered) keeps the modelled "
+                         "dispatch wall within --fault-ratio of the "
+                         "fault-free run (*/stream_faultfree) AND the "
+                         "recovered outputs are bit-identical — the "
+                         "fault-tolerant requeue gate (rows are timed "
+                         "paired)")
+    ap.add_argument("--fault-ratio", type=float, default=1.5,
+                    metavar="R", help="--check-fault threshold (default "
+                    "1.5: the ideal one-column-kill requeue costs ~5/4 "
+                    "in modelled wall, measured ~1.2x; 1.5 leaves noise "
+                    "margin without tolerating a second requeue pass)")
     ap.add_argument("--check-columns", action="store_true",
                     help="fail unless the */stream_ncols{D} column-scaling "
                          "sweep is monotone: per-column latency must drop "
@@ -176,6 +189,29 @@ def main() -> None:
                 raise SystemExit(1)
             print(f"check-resident ok: {res} {ur:.1f}us, {host} "
                   f"{uh:.1f}us ({uh / ur:.2f}x)")
+    if args.check_fault:
+        by_name = {r["name"]: r for r in rows}
+        pairs = [(n, n.rsplit("stream_fault_recovered", 1)[0] +
+                  "stream_faultfree")
+                 for n in by_name if n.endswith("stream_fault_recovered")]
+        if not pairs:
+            print("check-fault: no stream_fault rows found",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        for rec, free in pairs:
+            ur = by_name[rec]["us_per_call"]
+            free_row = by_name.get(free)
+            uf = free_row["us_per_call"] if free_row else None
+            identical = "bit_identical=True" in by_name[rec]["derived"]
+            if uf is None or ur > args.fault_ratio * uf or not identical:
+                print(f"check-fault FAILED: {rec}={ur:.1f}us vs "
+                      f"{free}={uf}us (recovered wall must stay <= "
+                      f"{args.fault_ratio}x fault-free) "
+                      f"bit_identical={identical}", file=sys.stderr)
+                raise SystemExit(1)
+            print(f"check-fault ok: {rec} {ur:.1f}us <= "
+                  f"{args.fault_ratio}x {free} {uf:.1f}us "
+                  f"({ur / uf:.2f}x), outputs bit-identical")
     if args.check_columns:
         import re
 

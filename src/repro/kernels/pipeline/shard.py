@@ -54,7 +54,8 @@ from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
                                            stream_frame_count)
 
 __all__ = ["column_frames", "column_shares", "column_chunks",
-           "pipeline_sharded", "pipeline_stream_sharded", "data_mesh_size"]
+           "requeue_ranges", "pipeline_sharded", "pipeline_stream_sharded",
+           "data_mesh_size"]
 
 
 def data_mesh_size(mesh) -> int:
@@ -112,6 +113,60 @@ def column_shares(n_frames: int, n_columns: int,
         base[d] += 1
     assert sum(base) == n_frames, (base, n_frames)
     return tuple(base)
+
+
+def requeue_ranges(ranges, n_columns: int,
+                   weights=None) -> list[list[tuple[int, int]]]:
+    """Deal a dead column's unretired frame ranges across columns.
+
+    ``ranges`` is an ordered list of ``(start, count)`` frame runs (frame
+    indices, so every boundary is hop-aligned by construction — frame i
+    starts at sample ``i*hop``). The total frame count is apportioned by
+    the SAME largest-remainder arithmetic as the initial deal
+    (`column_shares`, so a zero-weight — dead — column receives nothing),
+    then the runs are walked in order and split at share boundaries:
+    column d's portion is a list of ``(start, count)`` runs covering
+    exactly its share.
+
+    Properties the chaos tests pin: concatenating every column's runs in
+    column order reproduces the input frame set exactly (full coverage,
+    no overlap, order preserved), every run is non-empty, and per-column
+    counts equal `column_shares` of the total. Contiguous runs landing on
+    the same column COALESCE into one (the input runs are dispatch-sized
+    fragments of one contiguous share; re-fragmenting them across a
+    share boundary would make a survivor pay two dispatch overheads for
+    adjacent frames). This is the requeue step of the fault-tolerant
+    serving loop (`serve/fault.py`): the degraded deal is just the
+    healthy deal with dead columns' weights zeroed.
+    """
+    ranges = [(int(s), int(c)) for s, c in ranges if c > 0]
+    total = sum(c for _, c in ranges)
+    if total == 0:
+        return [[] for _ in range(n_columns)]
+    # weights=None means the equal deal; column_shares' None path pads to
+    # a uniform per-column count (shard_map shape agreement), but requeue
+    # needs shares summing to EXACTLY the frame total — use explicit
+    # equal weights to get the largest-remainder exact-sum path
+    shares = column_shares(total, n_columns,
+                           weights if weights is not None
+                           else (1.0,) * n_columns)
+    out: list[list[tuple[int, int]]] = [[] for _ in range(n_columns)]
+    it = iter(ranges)
+    cur_start, cur_count = 0, 0
+    for d, share in enumerate(shares):
+        need = share
+        while need > 0:
+            if cur_count == 0:
+                cur_start, cur_count = next(it)
+            take = min(need, cur_count)
+            if out[d] and out[d][-1][0] + out[d][-1][1] == cur_start:
+                out[d][-1] = (out[d][-1][0], out[d][-1][1] + take)
+            else:
+                out[d].append((cur_start, take))
+            cur_start += take
+            cur_count -= take
+            need -= take
+    return out
 
 
 def column_chunks(signal, window: int, hop: int, n_columns: int,

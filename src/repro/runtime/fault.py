@@ -1,10 +1,9 @@
 """Fault-tolerance runtime logic: heartbeats, straggler detection, elastic
-re-meshing, and a supervised step-retry loop.
+re-meshing, and a supervised retry loop with capped exponential backoff.
 
 Everything here is pure decision logic + a supervisor wrapper, unit-tested
-at small scale; the cluster hooks (GCS heartbeat bus, pod manager API) are
-the documented integration surface. The policies are the ones that matter
-at 1000+ nodes:
+at small scale (`tests/test_fault.py`); the policies are the ones that
+matter at 1000+ nodes:
 
   * heartbeat timeout => worker declared dead, elastic plan recomputed;
   * straggler = worker whose step time exceeds `straggler_factor` x the
@@ -12,16 +11,61 @@ at 1000+ nodes:
     (tail-latency mitigation);
   * elastic plan keeps the model (TP) axis intact — it must match the
     sharded layer dims — and shrinks/grows the data axis to the largest
-    power of two that the healthy-worker count supports;
-  * recovery = restore-latest-checkpoint on the new mesh (the elastic
-    reshard path of checkpoint/ckpt.py) + deterministic data replay
-    (data/pipeline.py makes batches a pure function of step).
+    power of two that the healthy-worker count supports; too few healthy
+    workers raises the typed `InsufficientHealthyWorkers` (never a bare
+    `assert`, which vanishes under ``python -O``);
+  * recovery = restore-latest-checkpoint on the new mesh + deterministic
+    replay (batches are a pure function of step).
+
+This module is ALSO the live serving runtime's decision layer
+(`serve/fault.py` + `serve/engine.py:ColumnScheduler.supervise`): the
+streaming telemetry's retire feed doubles as the heartbeat source, the
+per-column batch times feed `StragglerDetector`, and `Supervisor.call`
+is the capped-backoff retry the dispatch path wraps transient failures
+in. The fault taxonomy the serving layer injects/handles lives here too,
+so the decision layer never imports the serving layer:
+
+  * `TransientDispatchError` — retryable (a flaky dispatch; the column
+    survives). `Supervisor`'s default `retry_on` covers it.
+  * `ColumnDeadError` — fatal for the column (it will never answer
+    again); deliberately NOT a `RuntimeError` so no retry loop can
+    swallow it. The serving layer drains + requeues instead.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Callable, Optional
+
+
+class InsufficientHealthyWorkers(RuntimeError):
+    """Too few healthy workers/columns to satisfy the requested plan.
+
+    Raised by `elastic_plan` when the healthy-chip count cannot cover the
+    fixed model axis, and by the serving layer when every column of a
+    fleet is dead (`serve/engine.py:ColumnScheduler.mark_dead`) — the
+    caller decides whether to shrink the plan, wait for capacity, or
+    surface the outage."""
+
+
+class TransientDispatchError(RuntimeError):
+    """A retryable dispatch failure (flaky link, preempted worker slot).
+
+    The worker/column is expected to survive; `Supervisor.call` retries
+    these with capped exponential backoff."""
+
+
+class ColumnDeadError(Exception):
+    """A column died and will never answer again.
+
+    NOT a `RuntimeError` on purpose: retry loops whose `retry_on`
+    includes `RuntimeError` must not swallow a death. The serving layer
+    reacts by draining the column and requeuing its unretired work
+    (`serve/fault.py`)."""
+
+    def __init__(self, column: int, message: str = ""):
+        self.column = int(column)
+        super().__init__(message or f"column {column} died")
 
 
 @dataclasses.dataclass
@@ -31,6 +75,11 @@ class HeartbeatMonitor:
 
     def beat(self, worker: int, t: Optional[float] = None):
         self._last[worker] = time.monotonic() if t is None else t
+
+    def forget(self, worker: int) -> None:
+        """Drop a worker from monitoring (it was drained/released);
+        a forgotten worker is neither dead nor alive."""
+        self._last.pop(worker, None)
 
     def dead(self, now: Optional[float] = None) -> list[int]:
         now = time.monotonic() if now is None else now
@@ -54,6 +103,12 @@ class StragglerDetector:
     def record(self, worker: int, step_time_s: float):
         self._times.setdefault(worker, []).append(step_time_s)
         self._times[worker] = self._times[worker][-self.window:]
+
+    def forget(self, worker: int) -> None:
+        """Drop a worker's samples + strikes (evicted/drained workers
+        must not keep skewing the fleet median)."""
+        self._times.pop(worker, None)
+        self._strikes.pop(worker, None)
 
     def _median_of_medians(self) -> float:
         meds = sorted(sorted(v)[len(v) // 2] for v in self._times.values()
@@ -80,9 +135,16 @@ def elastic_plan(n_healthy_chips: int, *, model_axis: int = 16,
     """Largest (pod, data, model) mesh the healthy chips support.
 
     TP ('model') stays fixed (weight shards match it); DP shrinks to the
-    largest power of two; full pods are preferred (ICI locality).
+    largest power of two; full pods are preferred (ICI locality). Raises
+    the typed `InsufficientHealthyWorkers` when the healthy count cannot
+    cover even one model shard — a real error callers handle (shrink the
+    model axis, wait for capacity), not an `assert` that disappears
+    under ``python -O``.
     """
-    assert n_healthy_chips >= model_axis
+    if n_healthy_chips < model_axis:
+        raise InsufficientHealthyWorkers(
+            f"{n_healthy_chips} healthy chips cannot cover the fixed "
+            f"model axis of {model_axis}")
     pods = max(1, n_healthy_chips // pods_of)
     per_pod = min(n_healthy_chips // pods, pods_of)
     data = 1
@@ -95,19 +157,76 @@ def elastic_plan(n_healthy_chips: int, *, model_axis: int = 16,
 
 @dataclasses.dataclass
 class Supervisor:
-    """Wraps a step function with retry + checkpoint-restore recovery."""
-    save_fn: Callable        # (state, step) -> None
-    restore_fn: Callable     # (step) -> state
+    """Wraps work in retry + recovery policies.
+
+    Two entry points share the same (max_retries, retry_on, backoff)
+    policy knobs:
+
+    * `run` — the training-loop form: step/checkpoint/restore with
+      deterministic replay. ``retries`` counts CONSECUTIVE failures and
+      resets whenever the run makes NEW progress (advances past its
+      prior high-water step) — transient failures spread across a long
+      run must not exhaust the budget when there is progress in between,
+      while a persistent fault at one step still exhausts it (a reset on
+      every replayed step would retry forever).
+    * `call` — the serving-dispatch form: retry one callable on
+      ``retry_on`` with capped exponential backoff
+      (``backoff_base_s * backoff_factor**attempt``, clamped to
+      ``backoff_cap_s``; base 0 disables sleeping). The streaming
+      dispatch path wraps transient faults in this
+      (`serve/stream.py:BiosignalStream`).
+
+    ``retry_on`` is the configurable exception tuple: only those types
+    are retried, everything else propagates. The default covers
+    `RuntimeError` (and therefore `TransientDispatchError`);
+    `ColumnDeadError` is not a `RuntimeError` precisely so the default
+    never swallows a death. ``sleep`` is injectable for tests.
+    """
+    save_fn: Optional[Callable] = None     # (state, step) -> None
+    restore_fn: Optional[Callable] = None  # (step) -> state
     ckpt_every: int = 100
     max_retries: int = 3
+    retry_on: tuple = (RuntimeError,)
+    backoff_base_s: float = 0.0
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 30.0
+    sleep: Callable = time.sleep
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (0-based): capped exponential."""
+        return min(self.backoff_base_s * self.backoff_factor ** attempt,
+                   self.backoff_cap_s)
+
+    def call(self, fn: Callable, *args, **kwargs):
+        """Run ``fn`` with up to ``max_retries`` retries on ``retry_on``
+        failures, sleeping `backoff_s(attempt)` between attempts. The
+        last failure re-raises."""
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except self.retry_on:
+                if attempt >= self.max_retries:
+                    raise
+                delay = self.backoff_s(attempt)
+                if delay > 0:
+                    self.sleep(delay)
 
     def run(self, state, step_fn, batches, n_steps: int, *, start_step: int = 0,
             inject_failure: Optional[Callable] = None):
         """Deterministic replay: on failure, restore the last checkpoint and
         re-run from its step. `inject_failure(step)` raising simulates a
-        node loss (tests)."""
+        node loss (tests). Consecutive-failure budget: ``retries`` resets
+        whenever the run advances past its previous high-water step —
+        not just on checkpoint boundaries — so a long run survives any
+        number of transient failures as long as each recovery makes NEW
+        progress. Replayed steps below the high-water mark do not reset
+        the counter: a persistent fault at one step must exhaust the
+        budget, not loop forever on restore/replay/reset."""
+        assert self.save_fn is not None and self.restore_fn is not None, \
+            "Supervisor.run needs save_fn/restore_fn (call() does not)"
         step = start_step
         last_ckpt = start_step
+        high_water = start_step
         retries = 0
         metrics = None
         while step < n_steps:
@@ -116,11 +235,13 @@ class Supervisor:
                     inject_failure(step)
                 state, metrics = step_fn(state, batches(step))
                 step += 1
+                if step > high_water:
+                    high_water = step
+                    retries = 0
                 if step % self.ckpt_every == 0:
                     self.save_fn(state, step)
                     last_ckpt = step
-                    retries = 0
-            except RuntimeError:
+            except self.retry_on:
                 retries += 1
                 if retries > self.max_retries:
                     raise

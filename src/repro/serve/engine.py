@@ -19,6 +19,7 @@ rates into the non-uniform frame deal.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -26,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import init_cache
+from repro.runtime.fault import (HeartbeatMonitor, InsufficientHealthyWorkers,
+                                 StragglerDetector)
 
 
 @dataclasses.dataclass
@@ -227,6 +230,20 @@ class ColumnScheduler:
     `BiosignalStream.repin`. See `docs/ARCHITECTURE.md`
     (serving-runtime control loop).
 
+    SUPERVISION (the fault-tolerant layer): pass ``heartbeat_timeout``
+    (seconds) and/or a ``straggler`` (`runtime.fault.StragglerDetector`)
+    and the scheduler watches column LIVENESS through the same retire
+    feed — every retire from a placed stream beats the column's
+    `runtime.fault.HeartbeatMonitor` (resident counter drains included),
+    per-dispatch wall times go in via `record_batch_time`, and
+    `supervise` declares a column dead on heartbeat timeout or straggler
+    eviction, draining its streams onto survivors (`mark_dead`) and
+    zeroing it out of `deal_weights`. The last column dying raises the
+    typed `runtime.fault.InsufficientHealthyWorkers`. The requeue of a
+    dead column's unretired frame ranges is the serving front-end's job
+    (`serve/fault.py`); see `docs/ARCHITECTURE.md` (fault-tolerance
+    closed loop).
+
     >>> sched = ColumnScheduler(telemetry=StreamTelemetry(),
     ...                         rebalance_every=256)
     >>> stream = BiosignalStream(app, cfg, device=sched.admit("sensor-7"))
@@ -235,7 +252,10 @@ class ColumnScheduler:
 
     def __init__(self, devices=None, *, telemetry=None,
                  rebalance_ratio: float = 2.0,
-                 rebalance_every: int | None = None):
+                 rebalance_every: int | None = None,
+                 heartbeat_timeout: float | None = None,
+                 straggler: StragglerDetector | None = None,
+                 clock=time.monotonic):
         self.devices = list(devices) if devices is not None \
             else list(jax.devices())
         assert self.devices, "no devices to schedule columns on"
@@ -248,6 +268,23 @@ class ColumnScheduler:
         self._retired_since_rebalance = 0
         self._load = [0] * len(self.devices)
         self._placement: dict = {}
+        # SUPERVISION state: the retire feed doubles as the heartbeat
+        # source (a column that retires work is alive — per-batch retires
+        # and resident counter drains both count), per-column batch
+        # times feed the straggler detector, and `supervise` turns both
+        # into dead-column declarations + stream drains.
+        self._clock = clock
+        self.dead: set[int] = set()
+        self.heartbeats = (HeartbeatMonitor(timeout_s=heartbeat_timeout)
+                           if heartbeat_timeout is not None else None)
+        self.straggler = straggler
+        if self.heartbeats is not None:
+            assert telemetry is not None, \
+                "heartbeat supervision needs a telemetry retire feed"
+            now = clock()
+            for c in range(len(self.devices)):   # grace period from t0
+                self.heartbeats.beat(c, now)
+            telemetry.add_retire_listener(self._beat_on_retire)
         if rebalance_every is not None:
             assert telemetry is not None, \
                 "the retire-count trigger needs a telemetry retire feed"
@@ -256,6 +293,10 @@ class ColumnScheduler:
     @property
     def n_columns(self) -> int:
         return len(self.devices)
+
+    def healthy_columns(self) -> list[int]:
+        """Columns not declared dead — the only legal placement targets."""
+        return [c for c in range(len(self.devices)) if c not in self.dead]
 
     def column_of(self, stream_id) -> int:
         return self._placement[stream_id]
@@ -296,15 +337,20 @@ class ColumnScheduler:
     def admit(self, stream_id):
         """Place a new stream; returns the device to pin it to
         (`BiosignalStream(..., device=...)`). Rate-based (least measured
-        load) when telemetry is warm, least-stream-count otherwise."""
+        load) when telemetry is warm, least-stream-count otherwise. Dead
+        columns are never placement targets; with every column dead the
+        fleet cannot admit — the typed `InsufficientHealthyWorkers`."""
         assert stream_id not in self._placement, \
             f"stream {stream_id!r} already placed"
+        healthy = self.healthy_columns()
+        if not healthy:
+            raise InsufficientHealthyWorkers(
+                "every column is dead; nothing to admit onto")
         measured = self.measured_loads()
         if measured is None:
-            col = min(range(len(self.devices)),
-                      key=lambda i: (self._load[i], i))
+            col = min(healthy, key=lambda i: (self._load[i], i))
         else:
-            col = min(range(len(self.devices)),
+            col = min(healthy,
                       key=lambda i: (measured[i], self._load[i], i))
         self._load[col] += 1
         self._placement[stream_id] = col
@@ -353,12 +399,15 @@ class ColumnScheduler:
         column. Returns {stream_id: new device}; apply with
         `BiosignalStream.repin`."""
         moves: dict = {}
+        healthy = self.healthy_columns()
+        if len(healthy) < 2:
+            return moves
         for _ in range(len(self._placement) or 1):
             loads = self.measured_loads()
             if loads is None:
                 loads = [float(c) for c in self._load]
-            hi = max(range(len(loads)), key=lambda i: (loads[i], -i))
-            lo = min(range(len(loads)), key=lambda i: (loads[i], i))
+            hi = max(healthy, key=lambda i: (loads[i], -i))
+            lo = min(healthy, key=lambda i: (loads[i], i))
             if loads[hi] <= 0.0 or \
                     (loads[lo] > 0.0 and
                      loads[hi] / loads[lo] <= self.rebalance_ratio):
@@ -375,6 +424,81 @@ class ColumnScheduler:
             moves[pick] = self.devices[lo]
         return moves
 
+    # ------------------------------------------------------- supervision
+
+    def _beat_on_retire(self, stream_id, n_windows: int) -> None:
+        """Telemetry retire listener: a retire from one of THIS
+        scheduler's streams is a heartbeat for its column — per-batch
+        retires (`serve.stream.BiosignalStream._collect`) and resident
+        counter drains (`serve.resident.ResidentStream._drain`) both
+        land here, so moving the steady state on-device keeps the
+        liveness signal alive."""
+        if stream_id in self._placement:
+            self.heartbeats.beat(self._placement[stream_id], self._clock())
+
+    def record_batch_time(self, column: int, seconds: float) -> None:
+        """Feed one column dispatch's wall time to the straggler
+        detector (the serving analogue of a training step time)."""
+        if self.straggler is not None and column not in self.dead:
+            self.straggler.record(column, seconds)
+
+    def mark_dead(self, column: int) -> dict:
+        """Declare a column dead and DRAIN it: every stream pinned to it
+        re-pins onto the least-loaded surviving column (the drain moves
+        land in ``pending_moves`` like triggered rebalances — apply with
+        `BiosignalStream.repin`). The column stops being a placement /
+        rebalance / heartbeat target and its measured rate is zeroed out
+        of future `deal_weights`. Raises `InsufficientHealthyWorkers`
+        when the last column dies — the caller decides whether that is
+        an outage or a wait-for-capacity."""
+        if column in self.dead:
+            return {}
+        self.dead.add(column)
+        if self.heartbeats is not None:
+            self.heartbeats.forget(column)
+        if self.straggler is not None:
+            self.straggler.forget(column)
+        healthy = self.healthy_columns()
+        if not healthy:
+            raise InsufficientHealthyWorkers(
+                f"column {column} was the last healthy column")
+        moves: dict = {}
+        for sid, c in sorted(self._placement.items(), key=lambda kv: kv[0]):
+            if c != column:
+                continue
+            measured = self.measured_loads()
+            target = min(healthy,
+                         key=(lambda i: (self._load[i], i)) if measured
+                         is None else (lambda i: (measured[i],
+                                                  self._load[i], i)))
+            self._move(sid, target)
+            moves[sid] = self.devices[target]
+        self.pending_moves.update(moves)
+        return moves
+
+    def supervise(self, now: float | None = None) -> list[int]:
+        """One supervision pass: declare dead every column whose
+        heartbeat timed out (no retire for ``heartbeat_timeout``
+        seconds) or that the straggler detector evicted (persistently
+        slower than `StragglerDetector.straggler_factor` x the fleet
+        median), drain each via `mark_dead`, and return the newly-dead
+        columns. The closed loop is detection -> drain -> requeue ->
+        re-deal; this method is the detection + drain half — the requeue
+        half (unretired frame ranges onto survivors) lives in
+        `serve/fault.py`, see `docs/ARCHITECTURE.md`."""
+        suspects: list[int] = []
+        if self.heartbeats is not None:
+            suspects += self.heartbeats.dead(
+                self._clock() if now is None else now)
+        if self.straggler is not None:
+            suspects += self.straggler.stragglers()
+        newly = []
+        for c in suspects:
+            if 0 <= c < len(self.devices) and c not in self.dead:
+                newly.append(c)
+                self.mark_dead(c)
+        return newly
+
     def deal_weights(self, band: float = 0.0) -> tuple | None:
         """Measured per-column throughput rates (the retire-rate EWMAs) as
         a weight vector for the non-uniform deal
@@ -388,18 +512,30 @@ class ColumnScheduler:
         considered EQUALLY capable and share their cluster's mean rate —
         EWMA jitter between identical columns must not deal them unequal
         shares; only a genuine rate gap wider than the band changes the
-        deal. 0 disables it."""
+        deal. 0 disables it.
+
+        DEAD columns are zeroed: a drained column's weight is exactly
+        0.0 (never the stale pre-death EWMA, never the mean), so the
+        degraded deal rides `column_shares`' zero-weight path and deals
+        it nothing. All columns dead raises
+        `InsufficientHealthyWorkers` — there is no deal to compute."""
         if self.telemetry is None:
             return None
+        healthy = self.healthy_columns()
+        if not healthy:
+            raise InsufficientHealthyWorkers(
+                "every column is dead; no deal weights to compute")
         rates = [self.telemetry.column_rate(c)
                  for c in range(len(self.devices))]
-        seen = [r for r in rates if r > 0.0]
+        seen = [rates[c] for c in healthy if rates[c] > 0.0]
         if not seen:
             return None
         mean = sum(seen) / len(seen)
         rates = [r if r > 0.0 else mean for r in rates]
         if band > 0.0:
-            order = sorted(range(len(rates)), key=lambda c: rates[c])
+            # cluster only the healthy columns: a dead column's stale
+            # rate must not drag a cluster mean around
+            order = sorted(healthy, key=lambda c: rates[c])
             clusters, cur = [], [order[0]]
             for c in order[1:]:
                 if rates[c] <= rates[cur[0]] * (1.0 + band):
@@ -412,6 +548,8 @@ class ColumnScheduler:
                 m = sum(rates[c] for c in cl) / len(cl)
                 for c in cl:
                     rates[c] = m
+        for c in self.dead:
+            rates[c] = 0.0
         return tuple(rates)
 
     def open_stream(self, app=None, cfg=None, *, stream_id):

@@ -165,7 +165,8 @@ class ResidentStream:
                  cfg: StreamConfig | None = None,
                  rcfg: ResidentConfig | None = None, *, device=None,
                  telemetry: StreamTelemetry | None = None,
-                 stream_id=None, column: int = 0):
+                 stream_id=None, column: int = 0,
+                 injector=None, retry=None):
         self.app = app or make_app()
         cfg = cfg or StreamConfig()
         self.cfg = dataclasses.replace(
@@ -185,6 +186,21 @@ class ResidentStream:
         self.stream_id = stream_id if stream_id is not None else id(self)
         self.column = column
         self.last_drains: list[int] = []
+        # fault hooks, mirroring `serve.stream.BiosignalStream`: the
+        # injector fires once per loop dispatch (`on_dispatch`, transient
+        # faults retried via the supervisor's capped backoff) and once
+        # per counter drain (`on_drain` — a ColumnDeadError there is the
+        # "death mid-resident-sweep" chaos scenario: earlier drains
+        # already fed the telemetry, the outputs are lost with the
+        # column, and the serving layer requeues the whole share)
+        self.injector = injector
+        self._retry = retry
+        if injector is not None and retry is None:
+            from repro.runtime.fault import (Supervisor,
+                                             TransientDispatchError)
+
+            self._retry = Supervisor(max_retries=3,
+                                     retry_on=(TransientDispatchError,))
         if telemetry is not None:
             telemetry.attach(self.stream_id, column)
 
@@ -229,19 +245,29 @@ class ResidentStream:
             sig = jax.device_put(sig, self.device)
             counter = jax.device_put(counter, self.device)
         app = self.app
-        with warnings.catch_warnings():
-            # CPU (and interpret-mode) backends cannot honour buffer
-            # donation; the donation is FOR the accelerator target, and
-            # the fallback is correct — silence only that advisory
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            return _resident_loop(
-                sig, counter, app.fir_taps, app.svm_w, app.svm_b,
-                jnp.asarray(n, jnp.int32), window=cfg.window, hop=cfg.hop,
-                batch_windows=cfg.batch_windows, ring_depth=ring_depth,
-                n_sweeps=n_sweeps, fft_size=app.fft_size,
-                interpret=_interpret(), block_frames=cfg.block_rows,
-                outputs=cfg.outputs)
+
+        def dispatch():
+            # the injector fires BEFORE the loop consumes its donated
+            # buffers, so a retried transient attempt reuses them intact
+            if self.injector is not None:
+                self.injector.on_dispatch(self.column)
+            with warnings.catch_warnings():
+                # CPU (and interpret-mode) backends cannot honour buffer
+                # donation; the donation is FOR the accelerator target,
+                # and the fallback is correct — silence only that advisory
+                warnings.filterwarnings(
+                    "ignore",
+                    message="Some donated buffers were not usable")
+                return _resident_loop(
+                    sig, counter, app.fir_taps, app.svm_w, app.svm_b,
+                    jnp.asarray(n, jnp.int32), window=cfg.window,
+                    hop=cfg.hop, batch_windows=cfg.batch_windows,
+                    ring_depth=ring_depth, n_sweeps=n_sweeps,
+                    fft_size=app.fft_size, interpret=_interpret(),
+                    block_frames=cfg.block_rows, outputs=cfg.outputs)
+        if self._retry is not None:
+            return self._retry.call(dispatch)
+        return dispatch()
 
     def _drain(self, snaps) -> None:
         """Retire the device counters into the telemetry: cumulative
@@ -257,11 +283,17 @@ class ResidentStream:
         if not points or points[-1] != snaps.shape[0] - 1:
             points.append(snaps.shape[0] - 1)
         self.last_drains = [int(snaps[p]) for p in points]
-        if self.telemetry is None:
-            return
         prev = 0
         for cum in self.last_drains:
-            self.telemetry.record_retire(self.stream_id, cum - prev)
+            # the injector's per-drain hook fires mid-drain: a
+            # ColumnDeadError here leaves the EARLIER drains already
+            # recorded (heartbeats kept arriving until the death) but
+            # aborts before this one — the chaos tests' death
+            # mid-resident-sweep scenario
+            if self.injector is not None:
+                self.injector.on_drain(self.column)
+            if self.telemetry is not None:
+                self.telemetry.record_retire(self.stream_id, cum - prev)
             prev = cum
 
     def process(self, signal) -> dict:

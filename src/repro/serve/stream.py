@@ -301,7 +301,8 @@ class BiosignalStream:
     def __init__(self, app: BiosignalApp | None = None,
                  cfg: StreamConfig | None = None, *, device=None,
                  telemetry: StreamTelemetry | None = None,
-                 stream_id=None, column: int = 0):
+                 stream_id=None, column: int = 0,
+                 injector=None, retry=None):
         self.app = app or make_app()
         cfg = cfg or StreamConfig()
         self.cfg = dataclasses.replace(
@@ -326,6 +327,20 @@ class BiosignalStream:
         self.stream_id = stream_id if stream_id is not None else id(self)
         self.column = column
         self._resident = None       # lazy ResidentStream sibling (cached)
+        # fault hooks: ``injector`` (a `serve.fault.FaultInjector`) is
+        # consulted before every raw-chunk dispatch and may raise
+        # TransientDispatchError (retried below) or ColumnDeadError
+        # (propagates — the serving layer drains + requeues). ``retry``
+        # is the `runtime.fault.Supervisor` whose capped-exponential
+        # `call` wraps the dispatch; default: 3 retries, no sleep.
+        self.injector = injector
+        self._retry = retry
+        if injector is not None and retry is None:
+            from repro.runtime.fault import (Supervisor,
+                                             TransientDispatchError)
+
+            self._retry = Supervisor(max_retries=3,
+                                     retry_on=(TransientDispatchError,))
         if telemetry is not None:
             telemetry.attach(self.stream_id, column)
 
@@ -359,15 +374,26 @@ class BiosignalStream:
         return x if self.device is None else jax.device_put(x, self.device)
 
     def _dispatch_chunk(self, chunk):
-        """Raw-chunk dispatch: the kernel does the framing in VMEM."""
+        """Raw-chunk dispatch: the kernel does the framing in VMEM. With a
+        fault ``injector`` attached, the injector fires first (simulated
+        transient faults are retried through the supervisor's capped
+        backoff; a column death propagates to the serving layer)."""
         cfg = self.cfg
-        return app_pipeline_stream(self.app, self._place(chunk),
-                                   window=cfg.window, hop=cfg.hop,
-                                   block_frames=cfg.block_rows,
-                                   autotune=cfg.autotune,
-                                   outputs=cfg.outputs,
-                                   n_columns=cfg.n_columns, mesh=self.mesh,
-                                   column_weights=cfg.column_weights)
+
+        def dispatch():
+            if self.injector is not None:
+                self.injector.on_dispatch(self.column)
+            return app_pipeline_stream(self.app, self._place(chunk),
+                                       window=cfg.window, hop=cfg.hop,
+                                       block_frames=cfg.block_rows,
+                                       autotune=cfg.autotune,
+                                       outputs=cfg.outputs,
+                                       n_columns=cfg.n_columns,
+                                       mesh=self.mesh,
+                                       column_weights=cfg.column_weights)
+        if self._retry is not None:
+            return self._retry.call(dispatch)
+        return dispatch()
 
     def _dispatch_frames(self, frames):
         """Pre-framed dispatch (fallback/reference path)."""
@@ -459,5 +485,6 @@ class BiosignalStream:
             self._resident = ResidentStream(
                 self.app, self.cfg, rcfg, device=self.device,
                 telemetry=self.telemetry, stream_id=self.stream_id,
-                column=self.column)
+                column=self.column, injector=self.injector,
+                retry=self._retry)
         return self._resident.process(signal)

@@ -1,0 +1,258 @@
+"""Unit tests for the fault-tolerance decision layer (`runtime/fault.py`):
+heartbeat timeout edges, straggler strike/reset hysteresis, the typed
+`elastic_plan` error path, and `Supervisor` retry semantics (consecutive
+budget, configurable `retry_on`, capped-backoff `call`, restore-replay
+determinism). The end-to-end serving loop built on these lives in
+`tests/test_chaos.py`."""
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime.fault import (ColumnDeadError, HeartbeatMonitor,
+                                 InsufficientHealthyWorkers,
+                                 StragglerDetector, Supervisor,
+                                 TransientDispatchError, elastic_plan)
+
+
+# ------------------------------------------------------------ heartbeats
+
+def test_heartbeat_timeout_edges():
+    hb = HeartbeatMonitor(timeout_s=10.0)
+    hb.beat(0, t=100.0)
+    # the timeout is STRICT: exactly timeout_s of silence is still alive
+    assert hb.dead(now=110.0) == []
+    assert hb.alive(now=110.0) == [0]
+    assert hb.dead(now=110.0 + 1e-9) == [0]
+    # a fresh beat resurrects the worker before anyone observed it dead
+    hb.beat(0, t=111.0)
+    assert hb.dead(now=120.0) == []
+
+
+def test_heartbeat_forget_removes_from_both_lists():
+    hb = HeartbeatMonitor(timeout_s=5.0)
+    hb.beat(0, t=0.0)
+    hb.beat(1, t=0.0)
+    hb.forget(0)
+    assert hb.alive(now=1.0) == [1]
+    assert hb.dead(now=100.0) == [1]       # forgotten != dead
+    hb.forget(99)                          # unknown worker: no-op
+
+
+# ------------------------------------------------------------ stragglers
+
+def test_straggler_strikes_accumulate_then_evict():
+    det = StragglerDetector(straggler_factor=2.0, evict_after=3)
+    for w in range(4):
+        det.record(w, 1.0 if w != 3 else 5.0)
+    # strikes 1 and 2 are below the eviction threshold
+    assert det.stragglers() == []
+    assert det.stragglers() == []
+    assert det.stragglers() == [3]         # strike 3 evicts
+
+
+def test_straggler_strikes_reset_on_recovery():
+    det = StragglerDetector(window=4, straggler_factor=2.0, evict_after=2)
+    for w in range(3):
+        det.record(w, 1.0)
+    det.record(3, 9.0)
+    assert det.stragglers() == []          # strike 1
+    # the worker recovers: fast samples push the slow one out of the
+    # rolling window, the strike counter resets to zero
+    for _ in range(4):
+        det.record(3, 1.0)
+    assert det.stragglers() == []
+    assert det.stragglers() == []          # still zero strikes, not one
+
+
+def test_straggler_forget_drops_samples_and_strikes():
+    det = StragglerDetector(straggler_factor=2.0, evict_after=1)
+    for w in range(3):
+        det.record(w, 1.0)
+    det.record(3, 9.0)
+    det.forget(3)
+    assert det.stragglers() == []          # no sample left to strike on
+
+
+# ---------------------------------------------------------- elastic plan
+
+def test_elastic_plan_raises_typed_error_below_model_axis():
+    with pytest.raises(InsufficientHealthyWorkers):
+        elastic_plan(15, model_axis=16)
+    # the boundary itself is satisfiable: one model shard, data=1
+    plan = elastic_plan(16, model_axis=16)
+    assert plan == {"pod": 1, "data": 1, "model": 16, "chips": 16,
+                    "spare": 0}
+
+
+def test_elastic_plan_caller_can_degrade_on_typed_error():
+    """The caller-side pattern the typed exception exists for: shrink the
+    model axis instead of crashing on an assert."""
+    def plan_or_degrade(chips, model_axis):
+        while True:
+            try:
+                return elastic_plan(chips, model_axis=model_axis)
+            except InsufficientHealthyWorkers:
+                assert model_axis > 1, "no plan fits"
+                model_axis //= 2
+
+    plan = plan_or_degrade(12, model_axis=16)
+    assert plan["model"] == 8 and plan["chips"] <= 12
+    assert plan["data"] & (plan["data"] - 1) == 0
+
+
+def test_elastic_plan_data_axis_is_largest_pow2():
+    plan = elastic_plan(16 * 5, model_axis=16, pods_of=256)
+    assert plan["data"] == 4               # 5 rounds down to 4
+    assert plan["spare"] == 16
+    assert plan["chips"] == plan["pod"] * plan["data"] * plan["model"]
+
+
+# ------------------------------------------------------------ supervisor
+
+def _replay_harness():
+    store = {}
+
+    def save_fn(state, step):
+        store[step] = float(state)
+
+    def restore_fn(step):
+        return jnp.asarray(store.get(step, 0.0))
+
+    save_fn(jnp.asarray(0.0), 0)
+    return store, save_fn, restore_fn
+
+
+def test_supervisor_retries_reset_on_any_successful_step():
+    """max_retries bounds CONSECUTIVE failures: with progress between
+    failures, a long run tolerates arbitrarily many of them. The old
+    reset-on-checkpoint-only behavior would exhaust the budget here (4
+    failures > max_retries=3, all within one ckpt_every=100 interval)."""
+    _, save_fn, restore_fn = _replay_harness()
+    failures = {3, 5, 7, 9}
+
+    def inject(step):
+        if step in failures:
+            failures.discard(step)
+            raise RuntimeError("node lost")
+
+    sup = Supervisor(save_fn=save_fn, restore_fn=restore_fn,
+                     ckpt_every=100, max_retries=3)
+    state, step, _ = sup.run(jnp.asarray(0.0),
+                             lambda s, b: (s + b, {}),
+                             lambda s: jnp.asarray(1.0), 12,
+                             inject_failure=inject)
+    assert step == 12 and float(state) == 12.0
+
+
+def test_supervisor_consecutive_failures_exhaust_budget():
+    _, save_fn, restore_fn = _replay_harness()
+
+    def inject(step):
+        if step == 2:
+            raise RuntimeError("persistent fault")
+
+    sup = Supervisor(save_fn=save_fn, restore_fn=restore_fn,
+                     ckpt_every=100, max_retries=2)
+    with pytest.raises(RuntimeError, match="persistent"):
+        sup.run(jnp.asarray(0.0), lambda s, b: (s + b, {}),
+                lambda s: jnp.asarray(1.0), 5, inject_failure=inject)
+
+
+def test_supervisor_retry_on_is_configurable():
+    """Only the configured exception types are retried; a ColumnDeadError
+    is not a RuntimeError, so the default policy never swallows it."""
+    assert not issubclass(ColumnDeadError, RuntimeError)
+    _, save_fn, restore_fn = _replay_harness()
+
+    def inject(step):
+        if step == 1:
+            raise ValueError("not retryable by default")
+
+    sup = Supervisor(save_fn=save_fn, restore_fn=restore_fn, ckpt_every=2)
+    with pytest.raises(ValueError):
+        sup.run(jnp.asarray(0.0), lambda s, b: (s + b, {}),
+                lambda s: jnp.asarray(1.0), 4, inject_failure=inject)
+
+    once = [True]
+
+    def inject2(step):
+        if step == 1 and once:
+            once.pop()
+            raise ValueError("now retryable")
+
+    sup2 = Supervisor(save_fn=save_fn, restore_fn=restore_fn, ckpt_every=2,
+                      retry_on=(ValueError,))
+    state, step, _ = sup2.run(jnp.asarray(0.0), lambda s, b: (s + b, {}),
+                              lambda s: jnp.asarray(1.0), 4,
+                              inject_failure=inject2)
+    assert step == 4 and float(state) == 4.0
+
+
+def test_supervisor_restore_replay_is_deterministic():
+    """Replay from checkpoint is exact: the state after a crashy run
+    equals the fault-free run bit for bit (batches are a pure function
+    of step, so re-executed steps consume identical inputs)."""
+    def batches(step):
+        return jnp.asarray(float(step % 3 + 1))
+
+    def step_fn(s, b):
+        return s * 1.5 + b, {}
+
+    def run(failures):
+        _, save_fn, restore_fn = _replay_harness()
+
+        def inject(step):
+            if step in failures:
+                failures.discard(step)
+                raise RuntimeError("lost")
+
+        sup = Supervisor(save_fn=save_fn, restore_fn=restore_fn,
+                         ckpt_every=4)
+        state, _, _ = sup.run(jnp.asarray(0.0), step_fn, batches, 17,
+                              inject_failure=inject)
+        return float(state)
+
+    assert run(set()) == run({5, 6, 13})
+
+
+def test_supervisor_call_retries_with_capped_backoff():
+    sleeps = []
+    sup = Supervisor(max_retries=4, retry_on=(TransientDispatchError,),
+                     backoff_base_s=1.0, backoff_factor=2.0,
+                     backoff_cap_s=3.0, sleep=sleeps.append)
+    attempts = []
+
+    def flaky():
+        attempts.append(len(attempts))
+        if len(attempts) < 5:
+            raise TransientDispatchError("flaky link")
+        return "ok"
+
+    assert sup.call(flaky) == "ok"
+    # exponential 1, 2, 4, 8 clamped at the 3s cap
+    assert sleeps == [1.0, 2.0, 3.0, 3.0]
+
+
+def test_supervisor_call_exhausts_and_reraises():
+    sup = Supervisor(max_retries=2, retry_on=(TransientDispatchError,))
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise TransientDispatchError("down")
+
+    with pytest.raises(TransientDispatchError):
+        sup.call(always_fails)
+    assert len(calls) == 3                 # initial + 2 retries
+
+
+def test_supervisor_call_does_not_retry_column_death():
+    sup = Supervisor(max_retries=5)        # default retry_on=(RuntimeError,)
+    calls = []
+
+    def dies():
+        calls.append(1)
+        raise ColumnDeadError(2)
+
+    with pytest.raises(ColumnDeadError) as ei:
+        sup.call(dies)
+    assert len(calls) == 1 and ei.value.column == 2
