@@ -79,6 +79,19 @@ def main() -> None:
                     "1.5: the ideal one-column-kill requeue costs ~5/4 "
                     "in modelled wall, measured ~1.2x; 1.5 leaves noise "
                     "margin without tolerating a second requeue pass)")
+    ap.add_argument("--check-engine-fault", action="store_true",
+                    help="fail unless killing one of 4 LM engine slots "
+                         "mid-decode (*/engine_fault_recovered) keeps the "
+                         "serving wall within --engine-fault-ratio of the "
+                         "fault-free run (*/engine_faultfree) AND every "
+                         "request's tokens are bit-identical — the "
+                         "deterministic-replay gate (rows are timed "
+                         "paired)")
+    ap.add_argument("--engine-fault-ratio", type=float, default=1.5,
+                    metavar="R", help="--check-engine-fault threshold "
+                    "(default 1.5: one slot of 4 poisoned mid-decode "
+                    "costs ~1.4x in decode steps; 1.5 leaves noise "
+                    "margin without tolerating a second eviction)")
     ap.add_argument("--check-columns", action="store_true",
                     help="fail unless the */stream_ncols{D} column-scaling "
                          "sweep is monotone: per-column latency must drop "
@@ -212,6 +225,30 @@ def main() -> None:
             print(f"check-fault ok: {rec} {ur:.1f}us <= "
                   f"{args.fault_ratio}x {free} {uf:.1f}us "
                   f"({ur / uf:.2f}x), outputs bit-identical")
+    if args.check_engine_fault:
+        by_name = {r["name"]: r for r in rows}
+        pairs = [(n, n.rsplit("engine_fault_recovered", 1)[0] +
+                  "engine_faultfree")
+                 for n in by_name if n.endswith("engine_fault_recovered")]
+        if not pairs:
+            print("check-engine-fault: no engine_fault rows found",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        for rec, free in pairs:
+            ur = by_name[rec]["us_per_call"]
+            free_row = by_name.get(free)
+            uf = free_row["us_per_call"] if free_row else None
+            identical = "bit_identical=True" in by_name[rec]["derived"]
+            if uf is None or ur > args.engine_fault_ratio * uf \
+                    or not identical:
+                print(f"check-engine-fault FAILED: {rec}={ur:.1f}us vs "
+                      f"{free}={uf}us (recovered wall must stay <= "
+                      f"{args.engine_fault_ratio}x fault-free) "
+                      f"bit_identical={identical}", file=sys.stderr)
+                raise SystemExit(1)
+            print(f"check-engine-fault ok: {rec} {ur:.1f}us <= "
+                  f"{args.engine_fault_ratio}x {free} {uf:.1f}us "
+                  f"({ur / uf:.2f}x), tokens bit-identical")
     if args.check_columns:
         import re
 

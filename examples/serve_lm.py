@@ -1,5 +1,7 @@
 """Serve a small model with batched requests through the continuous-
-batching engine (greedy decode over 4 slots).
+batching engine (greedy decode over 4 slots), then re-serve the same
+traffic through the fault-tolerant supervision layer with a slot killed
+mid-decode — the replayed outputs must be bit-identical.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,16 +12,21 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import build_model, init_model_params
 from repro.serve.engine import Engine, Request
+from repro.serve.engine_fault import (FaultInjector, FaultTolerantEngine,
+                                      VirtualClock)
 
 cfg = reduced(get_config("h2o-danube-3-4b"))   # exercises SWA decode
 model = build_model(cfg)
 params = init_model_params(model)
-eng = Engine(model, params, slots=4, max_len=96)
+compiled = Engine.compile_model(model)
+eng = Engine(model, params, slots=4, max_len=96, compiled=compiled)
 
 rng = np.random.default_rng(0)
-for rid in range(6):
-    prompt = rng.integers(1, cfg.vocab_size, size=int(rng.integers(2, 6)))
-    eng.submit(Request(rid, prompt.tolist(), max_new=12))
+prompts = {rid: rng.integers(1, cfg.vocab_size,
+                             size=int(rng.integers(2, 6))).tolist()
+           for rid in range(6)}
+for rid, p in prompts.items():
+    eng.submit(Request(rid, list(p), max_new=12))
 
 t0 = time.perf_counter()
 done = eng.run_to_completion()
@@ -30,4 +37,17 @@ tok = sum(len(r.out) for r in done)
 print(f"{len(done)} requests, {tok} tokens in {dt:.1f}s "
       f"({tok / dt:.1f} tok/s, CPU)")
 assert len(done) == 6 and all(len(r.out) == 12 for r in done)
+
+# same traffic, supervised, with slot 0 killed at its 4th dispatch
+# (mid-decode): the poisoned slot's request requeues and replays on the
+# 3 survivors — bit-identical to the fault-free run above
+inj = FaultInjector(kill={0: 3}, clock=VirtualClock())
+ft = FaultTolerantEngine(model, params, slots=4, max_len=96,
+                         compiled=compiled, injector=inj)
+for rid, p in prompts.items():
+    ft.submit(Request(rid, list(p), max_new=12))
+recovered = ft.run_to_completion()
+assert {r.rid: r.out for r in recovered} == {r.rid: r.out for r in done}
+print(f"chaos replay: slot 0 killed mid-decode, {ft.replays} request "
+      f"replayed on {len(ft.healthy_slots())} survivors, bit-identical")
 print("serve_lm OK")

@@ -30,6 +30,15 @@ so the decision layer never imports the serving layer:
   * `ColumnDeadError` — fatal for the column (it will never answer
     again); deliberately NOT a `RuntimeError` so no retry loop can
     swallow it. The serving layer drains + requeues instead.
+
+The LM engine's supervision layer
+(`serve/engine_fault.py:FaultTolerantEngine`) reuses this taxonomy
+unchanged with an engine SLOT as the supervised unit: token retires
+beat `HeartbeatMonitor`, per-slot dispatch walls feed
+`StragglerDetector`, `Supervisor.call` absorbs transient dispatch
+faults in place, and the last healthy slot dying raises the same typed
+`InsufficientHealthyWorkers` — one decision layer, three consumers
+(training elasticity, column streams, LM slots).
 """
 from __future__ import annotations
 

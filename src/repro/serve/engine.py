@@ -6,6 +6,29 @@ ride along). Prefill fills a slot's cache region. Greedy or temperature
 sampling. The same engine drives the serve_lm example and the serving
 integration tests.
 
+SAMPLING IS A PER-REQUEST STREAM, not a shared sequential one: token t of
+request ``rid`` is drawn from ``fold_in(fold_in(PRNGKey(seed), rid), t)``
+(`_sample_per_request`). A shared split-per-engine-step key would make a
+request's tokens depend on unrelated traffic interleaving — admission
+order, co-tenants, slot placement — so an evicted request could never be
+REPLAYED bit-identically. With per-request streams a request's output is
+a pure function of (engine seed, rid, prompt, model), which is the
+invariant the fault-tolerant supervision layer
+(`serve/engine_fault.py:FaultTolerantEngine`) rests on: kill a slot
+mid-decode, re-prefill prompt + generated prefix elsewhere, and the
+continuation is bit-identical (property-tested in
+`tests/test_engine_determinism.py`).
+
+The dispatch path is factored into overridable hooks (`_admissible`,
+`_pre_dispatch_prefill`, `_prefill_dispatch`, `_decode_dispatch`,
+`_slot_retires`, `_on_retire`, `_on_finish`) so the supervision layer can
+inject faults, heartbeats, and eviction without duplicating the
+batching/bucketing logic. Typed errors at the admission boundary:
+`PromptTooLong` (a prompt the cache cannot hold is rejected at `submit`,
+never mid-bucket), `EngineStalled` (`run_to_completion` exhausted
+``max_steps`` with work still queued/live — carries the unfinished rids
+instead of silently dropping them).
+
 `ColumnScheduler` is the admission policy for the OTHER traffic class the
 repo serves — continuous biosignal streams: independent streams are placed
 on distinct column replicas (devices), the multi-tenant complement of
@@ -19,6 +42,7 @@ rates into the non-uniform frame deal.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional
 
@@ -31,6 +55,39 @@ from repro.runtime.fault import (HeartbeatMonitor, InsufficientHealthyWorkers,
                                  StragglerDetector)
 
 
+class PromptTooLong(ValueError):
+    """A submitted prompt exceeds the engine's cache length (``max_len``).
+
+    Raised at `Engine.submit` — admitting it would blow up mid-bucket
+    with a raw NumPy broadcast error (the bucket width is capped at
+    ``max_len`` but the prompt row write is not) and wedge every request
+    sharing the admission bucket. Rejecting at the boundary keeps one
+    bad request from taking down a batch."""
+
+    def __init__(self, rid, n_tokens: int, max_len: int):
+        self.rid = rid
+        self.n_tokens = int(n_tokens)
+        self.max_len = int(max_len)
+        super().__init__(
+            f"request {rid}: prompt of {n_tokens} tokens exceeds the "
+            f"engine cache length max_len={max_len}")
+
+
+class EngineStalled(RuntimeError):
+    """`Engine.run_to_completion` exhausted ``max_steps`` with requests
+    still queued or live. Carries the unfinished ``rids`` and the
+    ``done`` subset — the caller decides whether to resubmit, extend the
+    budget, or surface the outage; silently returning only the finished
+    subset (the old behaviour) dropped work on the floor."""
+
+    def __init__(self, unfinished, done=None):
+        self.unfinished = list(unfinished)
+        self.done = list(done) if done is not None else []
+        super().__init__(
+            f"engine stalled with {len(self.unfinished)} unfinished "
+            f"request(s) after the step budget: rids {self.unfinished}")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -38,11 +95,50 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # set by the supervision layer when the request was evicted from a
+    # faulty slot and requeued for replay (serve/engine_fault.py)
+    replayed: bool = False
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _merge_cache_leaves(old_leaves, new_leaves, mask, axes):
+    """Slot-masked cache merge, one fused jit call for the whole tree.
+
+    ``mask`` is a (slots,) bool vector of admitted slots; ``axes`` the
+    per-leaf slot-axis indices (static — read off the cache schema's
+    named "batch" axis, see `Engine.__init__`). A mask instead of an
+    index list keeps the trace shape fixed across admission patterns, so
+    every engine sharing a cache shape reuses ONE compilation — the
+    eager per-leaf gather/scatter this replaces dominated admission
+    wall time (~6ms per merge on CPU for a 2-leaf cache)."""
+    out = []
+    for ax, old, new in zip(axes, old_leaves, new_leaves):
+        shape = [1] * old.ndim
+        shape[ax] = old.shape[ax]
+        out.append(jnp.where(mask.reshape(shape), new, old))
+    return out
+
+
+@jax.jit
+def _sample_per_request(base_key, rids, steps, logits):
+    """Batched per-request-stream categorical sample.
+
+    Slot s draws from ``fold_in(fold_in(base_key, rids[s]), steps[s])``
+    where ``steps[s]`` is the token's index WITHIN its request — the key
+    depends only on (engine seed, rid, step), never on which slot the
+    request occupies, what else is in flight, or how many engine steps
+    have passed. That placement-invariance is what makes evicted-request
+    replay bit-identical (`serve/engine_fault.py`). Callers divide the
+    logits by temperature; dead slots ride along and are ignored."""
+    def one(rid, step, lg):
+        k = jax.random.fold_in(jax.random.fold_in(base_key, rid), step)
+        return jax.random.categorical(k, lg)
+    return jax.vmap(one)(rids, steps, logits)
 
 
 class Engine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0, compiled=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -52,11 +148,38 @@ class Engine:
         self.live: list[Optional[Request]] = [None] * slots
         self.lens = np.zeros(slots, np.int32)
         self.queue: list[Request] = []
-        self.key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(model.decode)
-        self._prefill = jax.jit(model.prefill)
+        # poisoned slots: masked out of admission, populated by the
+        # supervision layer (serve/engine_fault.py); the base engine
+        # never adds to it
+        self.dead_slots: set[int] = set()
+        self.base_key = jax.random.PRNGKey(seed)
+        # per-leaf index of the SLOT axis, read from the cache schema's
+        # named axes ("batch") — `_merge_slots` must not guess it from
+        # shapes: a stacked-layer leaf is (layers, slots, ...) and with
+        # n_layers == slots a shape probe picks the layer axis and merges
+        # the wrong rows (zeroing live layers for partially-admitted
+        # batches — placement-dependent logits)
+        axis_tree = jax.tree.map(
+            lambda p: p.axes.index("batch"),
+            model.cache_schema(slots, max_len),
+            is_leaf=lambda x: hasattr(x, "axes"))
+        self._slot_axes = tuple(jax.tree.flatten(axis_tree)[0])
+        # `compiled` shares one jitted (prefill, decode) pair across many
+        # engine instances over the same model (tests/benches rebuild
+        # engines per scenario; a fresh jax.jit wrapper per instance
+        # would recompile every time) — see `compile_model`
+        self._prefill, self._decode = (compiled if compiled is not None
+                                       else self.compile_model(model))
+
+    @staticmethod
+    def compile_model(model):
+        """One jitted (prefill, decode) pair, shareable across engines
+        via ``Engine(..., compiled=...)``."""
+        return jax.jit(model.prefill), jax.jit(model.decode)
 
     def submit(self, req: Request):
+        if len(req.prompt) > self.max_len:
+            raise PromptTooLong(req.rid, len(req.prompt), self.max_len)
         self.queue.append(req)
 
     def _length_bucket(self, n: int) -> int:
@@ -66,17 +189,39 @@ class Engine:
         prompt of length <= max_len must not be padded beyond it."""
         return min(1 << max(n - 1, 0).bit_length(), self.max_len)
 
+    def _admissible(self, s: int) -> bool:
+        """Is slot ``s`` a legal admission target? Free AND not poisoned
+        (the supervision layer masks faulty slots via ``dead_slots``)."""
+        return self.live[s] is None and s not in self.dead_slots
+
+    def _pre_dispatch_prefill(self, admitted: list) -> list:
+        """Hook called with the claimed ``(slot, request)`` pairs before
+        any prefill dispatch; returns the pairs that actually prefill.
+        The supervision layer injects prefill faults here."""
+        return admitted
+
+    def _prefill_dispatch(self, batch):
+        """One prefill dispatch — the supervision layer wraps this in
+        transient-fault retry."""
+        return self._prefill(self.params, batch, self.cache)
+
     def _admit(self):
         # claim every free slot first, then admit them in as few prefill
         # dispatches as possible (one per prompt-length bucket) — under
         # bursty load the seed's request-at-a-time admission paid one
-        # dispatch per request
+        # dispatch per request. A REPLAYED request (evicted from a faulty
+        # slot) prefills its prompt + already-generated prefix in one
+        # dispatch; for a fresh request `out` is empty and the sequence
+        # is just the prompt.
         admitted = []
         for s in range(self.slots):
-            if self.live[s] is None and self.queue:
+            if self._admissible(s) and self.queue:
                 req = self.queue.pop(0)
                 self.live[s] = req
                 admitted.append((s, req))
+        if not admitted:
+            return
+        admitted = self._pre_dispatch_prefill(admitted)
         if not admitted:
             return
         if getattr(self.model.cfg, "is_encdec", False):
@@ -84,13 +229,14 @@ class Engine:
             # prefill mode would run _encode, so keep the token-at-a-time
             # decode-mode admission for them
             for s, req in admitted:
-                for t, tok in enumerate(req.prompt):
+                seq = req.prompt + req.out
+                for t, tok in enumerate(seq):
                     batch = {"tokens": jnp.full((self.slots, 1), tok,
                                                 jnp.int32),
                              "cache_len": jnp.asarray(t, jnp.int32)}
                     _, cache = self._decode(self.params, batch, self.cache)
                     self.cache = self._merge_slots(cache, [s])
-                self.lens[s] = len(req.prompt)
+                self.lens[s] = len(seq)
             return
         # Right-padding a prompt is safe for LINEAR causal-attention
         # caches (pad positions only write K/V beyond the prompt, which
@@ -105,7 +251,7 @@ class Engine:
                   getattr(cfg, "sliding_window", None) is None)
         buckets: dict[int, list] = {}
         for s, req in admitted:
-            n = len(req.prompt)
+            n = len(req.prompt) + len(req.out)
             buckets.setdefault(self._length_bucket(n) if pad_ok else n,
                                []).append((s, req))
         for width, group in sorted(buckets.items()):
@@ -115,27 +261,43 @@ class Engine:
             # per-request admission, len(group)x fewer dispatches)
             tokens = np.zeros((self.slots, width), np.int32)
             for s, req in group:
-                tokens[s, : len(req.prompt)] = req.prompt
-            _, cache = self._prefill(self.params,
-                                     {"tokens": jnp.asarray(tokens)},
-                                     self.cache)
+                seq = req.prompt + req.out
+                tokens[s, : len(seq)] = seq
+            _, cache = self._prefill_dispatch(
+                {"tokens": jnp.asarray(tokens)})
             self.cache = self._merge_slots(cache, [s for s, _ in group])
             for s, req in group:
-                self.lens[s] = len(req.prompt)
+                self.lens[s] = len(req.prompt) + len(req.out)
 
     def _merge_slots(self, new_cache, slots: list):
         # admission updates every slot's cache row; keep only the admitted
-        # `slots` rows from the new cache
-        idx = np.asarray(slots)
+        # `slots` rows from the new cache. The slot axis per leaf comes
+        # from the cache schema's named "batch" axis (`self._slot_axes`),
+        # never from shape probing — see __init__ and
+        # `_merge_cache_leaves` for why axis and mask work the way they do.
+        mask = np.zeros(self.slots, bool)
+        mask[np.asarray(slots)] = True
+        old_leaves, treedef = jax.tree.flatten(self.cache)
+        new_leaves = jax.tree.flatten(new_cache)[0]
+        merged = _merge_cache_leaves(old_leaves, new_leaves,
+                                     jnp.asarray(mask), self._slot_axes)
+        return jax.tree.unflatten(treedef, merged)
 
-        def merge(old, new):
-            if old.ndim >= 1 and old.shape[0] == self.slots:
-                return old.at[idx].set(new[idx])
-            # stacked-layer leading dim: slot axis is axis 1
-            if old.ndim >= 2 and old.shape[1] == self.slots:
-                return old.at[:, idx].set(new[:, idx])
-            return new
-        return jax.tree.map(merge, self.cache, new_cache)
+    def _decode_dispatch(self, batch):
+        """One batched decode dispatch for all slots — the supervision
+        layer injects per-slot decode faults and transient retry here."""
+        return self._decode(self.params, batch, self.cache)
+
+    def _slot_retires(self, s: int) -> bool:
+        """Does slot ``s`` retire its sampled token this step? The
+        supervision layer masks hung slots (no retire, no heartbeat)."""
+        return True
+
+    def _on_retire(self, s: int, req: Request) -> None:
+        """Hook after slot ``s`` retires one token (heartbeat source)."""
+
+    def _on_finish(self, s: int, req: Request) -> None:
+        """Hook after ``req`` completes and frees slot ``s``."""
 
     def step(self):
         """One decode step for all live slots; returns finished requests."""
@@ -144,46 +306,61 @@ class Engine:
         if not live_mask.any():
             return []
         last_tokens = np.zeros((self.slots, 1), np.int32)
+        rids = np.zeros(self.slots, np.int32)
+        steps = np.zeros(self.slots, np.int32)
         for s, r in enumerate(self.live):
             if r is not None:
                 seq = r.prompt + r.out
                 last_tokens[s, 0] = seq[-1]
+                rids[s] = r.rid
+                steps[s] = len(r.out)
         # per-slot positions (continuous batching): slot s's last token sits
         # at index lens[s]-1; dead slots park at 0 (overwritten on admit)
         cl = np.maximum(self.lens - 1, 0).astype(np.int32)
         batch = {"tokens": jnp.asarray(last_tokens),
                  "cache_len": jnp.asarray(cl)}
-        logits, self.cache = self._decode(self.params, batch, self.cache)
-        # one batched sample over ALL slots (dead slots ride along and are
-        # ignored below) — a single key split + categorical/argmax instead
-        # of a per-slot Python loop
+        logits, self.cache = self._decode_dispatch(batch)
+        # one batched sample over ALL slots (dead slots ride along and
+        # are ignored below), each slot on its request's OWN key stream —
+        # see `_sample_per_request` for why this is the replay enabler
         if self.temperature > 0:
-            self.key, sub = jax.random.split(self.key)
-            sampled = np.asarray(jax.random.categorical(
-                sub, logits[:, 0, :] / self.temperature, axis=-1))
+            sampled = np.asarray(_sample_per_request(
+                self.base_key, jnp.asarray(rids), jnp.asarray(steps),
+                logits[:, 0, :] / self.temperature))
         else:
             sampled = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
         finished = []
         for s, r in enumerate(self.live):
-            if r is None:
+            if r is None or not self._slot_retires(s):
                 continue
             tok = int(sampled[s])
             r.out.append(tok)
             self.lens[s] += 1
+            self._on_retire(s, r)
             if len(r.out) >= r.max_new or self.lens[s] >= self.max_len - 1:
                 r.done = True
                 finished.append(r)
                 self.live[s] = None
                 self.lens[s] = 0
+                self._on_finish(s, r)
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000):
+        """Step until every submitted request finishes; the finished
+        requests are returned. Exhausting ``max_steps`` with work still
+        queued/live raises the typed `EngineStalled` (carrying the
+        unfinished rids and the done subset) instead of silently
+        returning only what happened to finish."""
         done = []
         for _ in range(max_steps):
             done += self.step()
             if not self.queue and all(r is None for r in self.live):
-                break
-        return done
+                return done
+        if not self.queue and all(r is None for r in self.live):
+            return done
+        unfinished = sorted({r.rid for r in self.queue} |
+                            {r.rid for r in self.live if r is not None})
+        raise EngineStalled(unfinished, done=done)
 
 
 class ColumnScheduler:

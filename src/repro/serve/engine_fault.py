@@ -1,0 +1,352 @@
+"""Fault-tolerant LM engine serving: slot supervision, deterministic
+request replay, and admission backpressure.
+
+The LM-side twin of `serve/fault.py`: PR 7 made the biosignal column
+fleet survive faults (heartbeats, dead-column drain, deterministic
+requeue); this module extends the same supervision to the `Engine`'s
+decode slots, the other traffic class the repo serves. The same decision
+layer (`runtime/fault.py`) and the same chaos injector
+(`serve/fault.py:FaultInjector`, with the engine SLOT playing the
+injector's "column" role) drive both.
+
+`FaultTolerantEngine` layers onto `serve/engine.py:Engine`'s dispatch
+hooks:
+
+* TOKEN RETIRES ARE HEARTBEATS — every token a slot retires beats its
+  `runtime.fault.HeartbeatMonitor` entry (the PR 7 telemetry-as-heartbeat
+  pattern: no separate liveness channel). A slot is monitored from its
+  admission beat until its request finishes; silence past
+  ``heartbeat_timeout`` virtual seconds declares it stuck.
+* STUCK/POISONED-SLOT EVICTION — a heartbeat-timed-out or persistently
+  slow slot (`runtime.fault.StragglerDetector` over per-slot dispatch
+  walls) is evicted: the slot is POISONED (masked out of admission via
+  `Engine.dead_slots`, never reused) and its request is requeued at the
+  queue FRONT in rid order for deterministic replay.
+* DETERMINISTIC REPLAY — a requeued request re-prefills its prompt PLUS
+  the already-generated prefix in one dispatch (`Engine._admit` admits
+  ``prompt + out``) and continues decoding at step ``len(out)``. Because
+  sampling is a per-request key stream
+  (`serve/engine.py:_sample_per_request` —
+  ``fold_in(fold_in(seed, rid), step)``), the continuation is
+  BIT-IDENTICAL to the fault-free run regardless of which slot it lands
+  on or what else is in flight.
+* TRANSIENT RETRY — injected transients and real ``RuntimeError``s from
+  the prefill/decode dispatch are retried in place with capped
+  exponential backoff (`runtime.fault.Supervisor.call`); an exhausted
+  retry budget escalates to slot eviction, never a lost request.
+* CHAOS SURFACE — the shared `serve/fault.py:FaultInjector` injects
+  per-slot faults into the `Engine._prefill_dispatch` /
+  `Engine._decode_dispatch` paths: ``kill`` at a slot's dispatch seq
+  (`runtime.fault.ColumnDeadError` → poison + requeue), ``transient``
+  one-shots (absorbed by retry), ``hang_from``
+  (`serve/fault.py:ColumnHungError` → the slot wedges: no retire, no
+  heartbeat — only the heartbeat timeout resolves it), ``slow`` (extra
+  virtual seconds per dispatch → straggler eviction). A slot's dispatch
+  seq counts every dispatch it participates in: its admission prefill is
+  seq 0, decode steps follow, retried attempts count — exactly the
+  column-runner convention.
+* ADMISSION BACKPRESSURE — the queue is bounded (``max_queue``):
+  `submit` raises the typed `QueueFull` instead of growing an unbounded
+  list. Requests carry a TTL/deadline (``ttl``/``default_ttl``): a
+  request not admitted by its deadline is dropped from the queue into
+  ``expired`` (and a dead-on-arrival TTL raises `RequestExpired` at
+  submit) — backpressure and shed load are engine signals, not silent
+  queue growth.
+* GRACEFUL DEGRADATION — every eviction shrinks the live-slot set; the
+  engine keeps serving on the survivors. Only when NO healthy slot
+  remains with work pending does it raise the typed
+  `runtime.fault.InsufficientHealthyWorkers` (the same error the column
+  fleet and `runtime/fault.py:elastic_plan` raise).
+
+THE INVARIANT (chaos-tested in `tests/test_engine_fault.py`, gated by
+``run.py --check-engine-fault``): for any injected fault schedule — slot
+kills at prefill or any decode step, transient faults, hang → heartbeat
+eviction, straggler eviction — every submitted request completes and its
+token sequence is bit-identical to the fault-free run, greedy AND
+temperature-sampled. See `docs/ARCHITECTURE.md` (engine supervision
+closed loop) and `docs/BENCHMARKS.md` (the seventh gate).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.runtime.fault import (ColumnDeadError, HeartbeatMonitor,
+                                 InsufficientHealthyWorkers,
+                                 StragglerDetector, Supervisor,
+                                 TransientDispatchError)
+from repro.serve.engine import Engine, Request
+from repro.serve.fault import ColumnHungError, FaultInjector, VirtualClock
+
+__all__ = ["QueueFull", "RequestExpired", "FaultTolerantEngine",
+           "FaultInjector", "VirtualClock"]
+
+
+class QueueFull(RuntimeError):
+    """The bounded admission queue is at capacity — typed backpressure.
+
+    The caller sheds load or retries later; the engine never grows the
+    queue past ``max_queue``. Carries the rejected ``rid`` and the queue
+    ``depth`` at rejection time."""
+
+    def __init__(self, rid, depth: int, max_queue: int):
+        self.rid = rid
+        self.depth = int(depth)
+        self.max_queue = int(max_queue)
+        super().__init__(
+            f"request {rid} rejected: admission queue at capacity "
+            f"({depth}/{max_queue})")
+
+
+class RequestExpired(RuntimeError):
+    """A request's TTL elapsed before it could be admitted.
+
+    Raised at `FaultTolerantEngine.submit` for a dead-on-arrival TTL;
+    requests that expire while QUEUED are dropped into
+    `FaultTolerantEngine.expired` at the next step instead (there is no
+    caller on the stack to throw to)."""
+
+    def __init__(self, rid, ttl: float):
+        self.rid = rid
+        self.ttl = float(ttl)
+        super().__init__(f"request {rid} expired (ttl {ttl:g}s)")
+
+
+class FaultTolerantEngine(Engine):
+    """`Engine` + the supervision closed loop (see the module docstring).
+
+    Construction mirrors `serve/fault.py:FaultTolerantColumnRunner`:
+    ``injector`` is the shared chaos `FaultInjector` (slot = the
+    injector's column), ``heartbeat_timeout`` arms decode-progress
+    liveness, ``straggler`` arms slow-slot eviction, ``retry`` is the
+    transient-fault `runtime.fault.Supervisor` (capped exponential
+    backoff; default: 3 retries, no sleep), ``clock`` the injectable time
+    source (defaults to the injector's `VirtualClock` when it has one,
+    else wall time). ``max_queue``/``default_ttl`` bound admission.
+
+    >>> eng = FaultTolerantEngine(model, params, slots=4,
+    ...                           heartbeat_timeout=5.0,
+    ...                           injector=FaultInjector(kill={0: 3}))
+    >>> eng.submit(Request(0, [1, 2, 3], max_new=8))
+    >>> done = eng.run_to_completion()   # bit-identical to fault-free
+    """
+
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
+                 temperature: float = 0.0, seed: int = 0, compiled=None,
+                 max_queue: Optional[int] = None,
+                 default_ttl: Optional[float] = None,
+                 heartbeat_timeout: Optional[float] = None,
+                 straggler: Optional[StragglerDetector] = None,
+                 injector: Optional[FaultInjector] = None,
+                 retry: Optional[Supervisor] = None, clock=None):
+        super().__init__(model, params, slots=slots, max_len=max_len,
+                         temperature=temperature, seed=seed,
+                         compiled=compiled)
+        self.max_queue = max_queue
+        self.default_ttl = default_ttl
+        self.injector = injector
+        self.retry = retry if retry is not None else Supervisor()
+        self.clock = clock if clock is not None else (
+            injector.clock if injector is not None and
+            injector.clock is not None else time.monotonic)
+        self.heartbeats = (HeartbeatMonitor(timeout_s=heartbeat_timeout)
+                           if heartbeat_timeout is not None else None)
+        self.straggler = straggler
+        self.hung: set[int] = set()
+        self.deadlines: dict = {}          # rid -> absolute deadline
+        self.expired: list[Request] = []   # TTL-dropped while queued
+        self.evictions = 0
+        self.replays = 0
+        self.decode_steps = 0
+        self.prefill_dispatches = 0
+
+    # ---------------------------------------------------- admission edge
+
+    def healthy_slots(self) -> list[int]:
+        """Slots not poisoned — the only legal admission targets."""
+        return [s for s in range(self.slots) if s not in self.dead_slots]
+
+    def submit(self, req: Request, *, ttl: Optional[float] = None):
+        """Bounded, TTL-aware admission. Raises `QueueFull` when the
+        queue is at ``max_queue`` (backpressure — the unbounded
+        ``queue.append`` is exactly what this replaces), `RequestExpired`
+        for a dead-on-arrival TTL, and the base engine's `PromptTooLong`
+        for a prompt the cache cannot hold."""
+        ttl = self.default_ttl if ttl is None else ttl
+        if ttl is not None and ttl <= 0:
+            raise RequestExpired(req.rid, ttl)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise QueueFull(req.rid, len(self.queue), self.max_queue)
+        super().submit(req)
+        if ttl is not None:
+            self.deadlines[req.rid] = self.clock() + ttl
+
+    def _expire_queued(self) -> list[Request]:
+        """Drop queued requests whose deadline passed into ``expired``
+        (typed shed-load accounting, not silent loss)."""
+        if not self.deadlines:
+            return []
+        now = self.clock()
+        dropped = [r for r in self.queue
+                   if self.deadlines.get(r.rid, now) < now]
+        if dropped:
+            gone = {r.rid for r in dropped}
+            self.queue = [r for r in self.queue if r.rid not in gone]
+            for r in dropped:
+                self.deadlines.pop(r.rid, None)
+            self.expired.extend(dropped)
+        return dropped
+
+    # -------------------------------------------------- fault injection
+
+    def _probe(self, s: int) -> str:
+        """Consult the chaos injector for slot ``s``'s share of the next
+        dispatch: ``"ok"``, ``"hung"`` (wedged — no result, no retire,
+        no heartbeat), or ``"fault"`` (killed, or transient retry budget
+        exhausted). Transients are retried through ``retry`` — each
+        attempt advances the slot's injector seq, the column-runner
+        convention — and the per-probe virtual wall feeds the straggler
+        detector."""
+        if self.injector is None:
+            return "ok"
+        t0 = self.clock()
+        try:
+            self.retry.call(self.injector.on_dispatch, s)
+            return "ok"
+        except ColumnHungError:
+            return "hung"
+        except (ColumnDeadError, TransientDispatchError):
+            return "fault"
+        finally:
+            self._record_time(s, self.clock() - t0)
+
+    def _record_time(self, s: int, dt: float) -> None:
+        if self.straggler is not None and s not in self.dead_slots:
+            self.straggler.record(s, dt)
+
+    def _beat(self, s: int) -> None:
+        if self.heartbeats is not None:
+            self.heartbeats.beat(s, self.clock())
+
+    # ------------------------------------------------------ engine hooks
+
+    def _admissible(self, s: int) -> bool:
+        # hung slots hold their (wedged) request, so the base free-slot
+        # check already excludes them; dead_slots masks poisoned ones
+        return super()._admissible(s)
+
+    def _pre_dispatch_prefill(self, admitted: list) -> list:
+        kept = []
+        for s, req in admitted:
+            # beat FIRST: admission registers the slot for liveness
+            # monitoring, so a slot that wedges during its very first
+            # prefill still times out (an unmonitored slot is neither
+            # dead nor alive to `HeartbeatMonitor`)
+            self._beat(s)
+            status = self._probe(s)
+            if status == "hung":
+                self.hung.add(s)        # request occupies the slot with
+                continue                # no cache effect; timeout resolves
+            if status == "fault":
+                self._evict(s)
+                continue
+            kept.append((s, req))
+        return kept
+
+    def _prefill_dispatch(self, batch):
+        self.prefill_dispatches += 1
+        return self.retry.call(super()._prefill_dispatch, batch)
+
+    def _decode_dispatch(self, batch):
+        # probe hung slots too: a wedged dispatch still burns virtual
+        # time (`FaultInjector.on_dispatch` advances the clock before
+        # raising), and that advance is what lets the heartbeat timeout
+        # fire even when EVERY live slot is wedged
+        for s, r in enumerate(self.live):
+            if r is None:
+                continue
+            status = self._probe(s)
+            if status == "hung":
+                self.hung.add(s)
+            elif status == "fault":
+                self._evict(s)
+        self.decode_steps += 1
+        return self.retry.call(super()._decode_dispatch, batch)
+
+    def _slot_retires(self, s: int) -> bool:
+        return s not in self.hung
+
+    def _on_retire(self, s: int, req: Request) -> None:
+        self._beat(s)                   # a retired token IS a heartbeat
+
+    def _on_finish(self, s: int, req: Request) -> None:
+        if self.heartbeats is not None:
+            self.heartbeats.forget(s)   # idle slots are not monitored
+        self.deadlines.pop(req.rid, None)
+
+    # -------------------------------------------------- the closed loop
+
+    def _evict(self, s: int) -> None:
+        """Poison slot ``s`` and requeue its request for replay: the slot
+        leaves the admission set for good (degraded mode — the engine
+        keeps serving on the survivors), monitors forget it, and its
+        request goes back to the queue front carrying its generated
+        prefix."""
+        self.dead_slots.add(s)
+        self.hung.discard(s)
+        if self.heartbeats is not None:
+            self.heartbeats.forget(s)
+        if self.straggler is not None:
+            self.straggler.forget(s)
+        req = self.live[s]
+        if req is not None:
+            self.live[s] = None
+            self.lens[s] = 0
+            self._requeue(req)
+        self.evictions += 1
+
+    def _requeue(self, req: Request) -> None:
+        """Deterministic requeue: evicted requests re-enter at the queue
+        FRONT (ahead of never-started work) in rid order among
+        themselves, so the replay schedule is a pure function of the
+        fault schedule."""
+        req.replayed = True
+        i = 0
+        while (i < len(self.queue) and self.queue[i].replayed
+               and self.queue[i].rid < req.rid):
+            i += 1
+        self.queue.insert(i, req)
+        self.replays += 1
+
+    def _supervise(self) -> list[int]:
+        """Detection half of the loop: evict every slot whose heartbeat
+        timed out (no token retired for ``heartbeat_timeout``) or that
+        the straggler detector condemned. Returns the newly evicted
+        slots; their requests are already requeued."""
+        suspects: list[int] = []
+        if self.heartbeats is not None:
+            suspects += self.heartbeats.dead(self.clock())
+        if self.straggler is not None:
+            suspects += self.straggler.stragglers()
+        newly = []
+        for s in suspects:
+            if 0 <= s < self.slots and s not in self.dead_slots:
+                newly.append(s)
+                self._evict(s)
+        return newly
+
+    def step(self):
+        """One supervised engine step: expire stale queue entries, decode
+        (with per-slot fault injection riding the dispatch hooks), then
+        run the detection pass. Raises
+        `runtime.fault.InsufficientHealthyWorkers` when work is pending
+        and no healthy slot remains."""
+        self._expire_queued()
+        if not self.healthy_slots() and (
+                self.queue or any(r is not None for r in self.live)):
+            raise InsufficientHealthyWorkers(
+                "every engine slot is poisoned; pending requests cannot "
+                "be served")
+        finished = super().step()
+        self._supervise()
+        return finished

@@ -41,6 +41,15 @@ drain path (`serve/resident.py:ResidentStream._drain`). The bench gate
 (`run.py --check-fault`, `docs/BENCHMARKS.md`) pins the recovery cost:
 killing one of D=4 columns mid-run must keep the modelled dispatch wall
 within 1.5x of the fault-free run, outputs bit-identical.
+
+The injector is SHARED ACROSS BOTH TRAFFIC CLASSES the repo serves: the
+"column" key is just the supervised unit's index, so the fault-tolerant
+LM engine (`serve/engine_fault.py:FaultTolerantEngine`) injects the same
+schedules with an engine SLOT standing in as the column (a slot's
+admission prefill is its seq 0, decode steps follow). One chaos
+vocabulary — kill / transient / hang_from / slow, one `VirtualClock` —
+drives both the frame-requeue property (`tests/test_chaos.py`) and the
+request-replay property (`tests/test_engine_fault.py`).
 """
 from __future__ import annotations
 

@@ -1,0 +1,256 @@
+"""Chaos tests for the fault-tolerant LM engine (`serve/engine_fault.py`).
+
+THE INVARIANT under test everywhere — the LM-side twin of
+`tests/test_chaos.py`'s column property: for ANY injected fault schedule
+(slot kills at prefill or any decode step, transient prefill/decode
+faults, hang -> heartbeat eviction, straggler eviction), every submitted
+request completes and its token sequence is **bit-identical** to the
+fault-free run, greedy AND temperature-sampled. Every scenario runs on
+the injected `VirtualClock` so heartbeat timeouts and straggler medians
+replay deterministically. Admission backpressure (`QueueFull`, TTL
+expiry) and graceful degradation (`InsufficientHealthyWorkers` only when
+no healthy slot remains) ride along.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model, init_model_params
+from repro.runtime.fault import (InsufficientHealthyWorkers,
+                                 StragglerDetector, Supervisor)
+from repro.serve.engine import Engine, EngineStalled, Request
+from repro.serve.engine_fault import (FaultInjector, FaultTolerantEngine,
+                                      QueueFull, RequestExpired,
+                                      VirtualClock)
+
+SLOTS, MAX_LEN, MAX_NEW = 4, 64, 6
+PROMPTS = {0: [3, 1, 4, 1], 1: [5, 9, 2], 2: [6, 5], 3: [8, 9, 7, 9, 3],
+           4: [2, 3, 8], 5: [4, 6, 2, 6]}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduced(get_config("qwen1.5-0.5b")),
+                              vocab_size=64)
+    model = build_model(cfg)
+    params = init_model_params(model, seed=3)
+    compiled = Engine.compile_model(model)
+    return model, params, compiled
+
+
+@pytest.fixture(scope="module")
+def reference(setup):
+    """Fault-free outputs {rid: tokens}, keyed by temperature."""
+    cache = {}
+
+    def get(temperature: float):
+        if temperature not in cache:
+            done, _ = _serve(setup, Engine, temperature)
+            cache[temperature] = done
+        return cache[temperature]
+
+    return get
+
+
+def _engine(setup, cls, temperature, **kw):
+    model, params, compiled = setup
+    return cls(model, params, slots=SLOTS, max_len=MAX_LEN,
+               temperature=temperature, seed=7, compiled=compiled, **kw)
+
+
+def _serve(setup, cls, temperature, rids=tuple(PROMPTS), **kw):
+    eng = _engine(setup, cls, temperature, **kw)
+    for rid in rids:
+        eng.submit(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    done = eng.run_to_completion(max_steps=500)
+    assert sorted(r.rid for r in done) == sorted(rids)
+    return {r.rid: tuple(r.out) for r in done}, eng
+
+
+def _ft(temperature=0.8, **inj_kw):
+    clk = VirtualClock()
+    inj = FaultInjector(dispatch_s=0.01, clock=clk, **inj_kw)
+    return inj, clk
+
+
+# ------------------------------------------------------------ no faults
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_fault_free_matches_base_engine(setup, reference, temperature):
+    """Supervision with no injected faults is a no-op on the tokens."""
+    out, eng = _serve(setup, FaultTolerantEngine, temperature,
+                      injector=FaultInjector(clock=VirtualClock()),
+                      heartbeat_timeout=10.0)
+    assert out == reference(temperature)
+    assert eng.evictions == 0 and eng.replays == 0
+
+
+# ---------------------------------------------------------- kill sweeps
+
+# per-slot dispatch seq: the admission prefill is seq 0, decode steps
+# follow — so seq 0 kills the slot AT PREFILL, seq 1 at its first decode
+# step, seq k mid-decode.
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("slot,seq", [(0, 0), (1, 0), (0, 1), (2, 1),
+                                      (0, 3), (3, 5)])
+def test_killed_slot_recovers_bit_identical(setup, reference, temperature,
+                                            slot, seq):
+    inj, clk = _ft(kill={slot: seq})
+    out, eng = _serve(setup, FaultTolerantEngine, temperature, injector=inj)
+    assert out == reference(temperature)
+    assert eng.dead_slots == {slot}
+    assert eng.evictions == 1 and eng.replays == 1
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_multi_kill_recovers_bit_identical(setup, reference, temperature):
+    inj, clk = _ft(kill={0: 2, 2: 0, 3: 4})
+    out, eng = _serve(setup, FaultTolerantEngine, temperature, injector=inj)
+    assert out == reference(temperature)
+    assert eng.dead_slots == {0, 2, 3}
+    # the engine finished everything on the single surviving slot
+    assert eng.healthy_slots() == [1]
+
+
+def test_replayed_request_marked_and_requeued_deterministically(setup):
+    inj, clk = _ft(kill={0: 1, 1: 1})
+    eng = _engine(setup, FaultTolerantEngine, 0.0, injector=inj)
+    for rid in PROMPTS:
+        eng.submit(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    eng.step()
+    # both evicted requests sit at the queue FRONT in rid order
+    assert [r.rid for r in eng.queue[:2]] == [0, 1]
+    assert all(r.replayed for r in eng.queue[:2])
+    assert not any(r.replayed for r in eng.queue[2:])
+
+
+# ----------------------------------------------------------- transients
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("faults", [
+    {(0, 0)},                    # at prefill
+    {(1, 1)},                    # at first decode step
+    {(2, 3), (2, 4)},            # two in a row mid-decode
+    {(0, 0), (1, 2), (3, 3)},    # spread across slots
+])
+def test_transient_faults_absorbed_in_place(setup, reference, temperature,
+                                            faults):
+    """Retryable faults never evict: the Supervisor's backoff absorbs
+    them (each retry consumes the slot's next injector seq)."""
+    inj, clk = _ft(transient=faults)
+    out, eng = _serve(setup, FaultTolerantEngine, temperature, injector=inj)
+    assert out == reference(temperature)
+    assert eng.evictions == 0 and eng.dead_slots == set()
+
+
+def test_transient_budget_exhausted_escalates_to_eviction(setup, reference):
+    """More consecutive transients than the retry budget: the slot is
+    evicted and the request replays — still bit-identical, never lost."""
+    inj, clk = _ft(transient={(0, s) for s in range(10)})
+    out, eng = _serve(setup, FaultTolerantEngine, 0.8, injector=inj,
+                      retry=Supervisor(max_retries=2))
+    assert out == reference(0.8)
+    assert eng.dead_slots == {0} and eng.replays == 1
+
+
+# ---------------------------------------------------------------- hangs
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("slot,seq", [(0, 0), (1, 1), (2, 4)])
+def test_hung_slot_evicted_by_heartbeat_timeout(setup, reference,
+                                                temperature, slot, seq):
+    """A wedged slot neither errors nor retires — only the decode-progress
+    heartbeat going quiet can resolve it (token retires beat the monitor;
+    a hung slot stops beating)."""
+    inj, clk = _ft(hang_from={slot: seq})
+    out, eng = _serve(setup, FaultTolerantEngine, temperature, injector=inj,
+                      heartbeat_timeout=0.1)
+    assert out == reference(temperature)
+    assert eng.dead_slots == {slot}
+    assert eng.evictions == 1 and eng.replays == 1
+
+
+def test_hang_without_supervision_stalls_loudly(setup):
+    """No heartbeat monitor: the wedged slot can never be declared dead,
+    so the engine runs out of steps and raises the typed EngineStalled
+    naming the wedged request — loud, not a silent drop."""
+    inj, clk = _ft(hang_from={0: 1})
+    eng = _engine(setup, FaultTolerantEngine, 0.0, injector=inj)
+    for rid in (0, 1):
+        eng.submit(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    with pytest.raises(EngineStalled) as ei:
+        eng.run_to_completion(max_steps=40)
+    assert 0 in ei.value.unfinished
+
+
+# ------------------------------------------------------------ stragglers
+
+def test_straggler_slot_evicted_and_replayed(setup, reference):
+    """A persistently slow slot (injected per-dispatch delay) is evicted
+    by the median-of-medians straggler vote before it ever fails."""
+    inj, clk = _ft(slow={1: 0.5})
+    out, eng = _serve(
+        setup, FaultTolerantEngine, 0.8, injector=inj,
+        straggler=StragglerDetector(window=4, straggler_factor=3.0,
+                                    evict_after=2))
+    assert out == reference(0.8)
+    assert 1 in eng.dead_slots
+
+
+# -------------------------------------------------- degradation to zero
+
+def test_all_slots_dead_raises_insufficient_healthy_workers(setup):
+    inj, clk = _ft(kill={s: 0 for s in range(SLOTS)})
+    eng = _engine(setup, FaultTolerantEngine, 0.0, injector=inj)
+    for rid in (0, 1):
+        eng.submit(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    with pytest.raises(InsufficientHealthyWorkers):
+        eng.run_to_completion(max_steps=100)
+    assert eng.dead_slots == set(range(SLOTS))
+
+
+# ------------------------------------------------- admission backpressure
+
+def test_queue_full_rejects_typed(setup):
+    eng = _engine(setup, FaultTolerantEngine, 0.0, max_queue=2)
+    eng.submit(Request(0, [1, 2], max_new=2))
+    eng.submit(Request(1, [1, 2], max_new=2))
+    with pytest.raises(QueueFull) as ei:
+        eng.submit(Request(2, [1, 2], max_new=2))
+    assert ei.value.rid == 2 and ei.value.max_queue == 2
+    # admission drains the queue; capacity frees up again
+    eng.run_to_completion()
+    eng.submit(Request(2, [1, 2], max_new=2))
+
+
+def test_ttl_expiry_drops_queued_requests_typed(setup):
+    """Requests whose deadline passes while QUEUED are shed into
+    `engine.expired` (and a dead-on-arrival TTL raises at submit);
+    admitted requests still finish."""
+    clk = VirtualClock()
+    inj = FaultInjector(dispatch_s=1.0, clock=clk)
+    eng = _engine(setup, FaultTolerantEngine, 0.0, injector=inj)
+    for rid in range(SLOTS):            # fill every slot
+        eng.submit(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    eng.submit(Request(9, [1, 2], max_new=2), ttl=0.5)   # queued, will age
+    with pytest.raises(RequestExpired):
+        eng.submit(Request(10, [1, 2], max_new=2), ttl=0.0)
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == list(range(SLOTS))
+    assert [r.rid for r in eng.expired] == [9]
+    assert 9 not in eng.deadlines
+
+
+# ----------------------------------------------------- injector sharing
+
+def test_injector_determinism_across_reset(setup, reference):
+    """`FaultInjector.reset` rewinds the per-slot seq counters (not the
+    clock): one schedule replays identically across reps — the property
+    the bench gate's paired reps lean on."""
+    inj, clk = _ft(kill={0: 2})
+    out1, e1 = _serve(setup, FaultTolerantEngine, 0.8, injector=inj)
+    inj.reset()
+    out2, e2 = _serve(setup, FaultTolerantEngine, 0.8, injector=inj)
+    assert out1 == out2 == reference(0.8)
+    assert e1.evictions == e2.evictions == 1

@@ -149,6 +149,46 @@ def test_engine_admission_bucket_capped_at_max_len(tiny_setup):
     assert len(done) == 1 and len(done[0].out) == 2
 
 
+def test_engine_rejects_oversized_prompt_typed(tiny_setup):
+    """A prompt longer than max_len is rejected at submit() with the
+    typed PromptTooLong — previously it crashed `_admit` with a raw
+    NumPy broadcast ValueError mid-batch, wedging the whole admission
+    bucket it shared with valid requests."""
+    from repro.models import init_model_params
+    from repro.serve.engine import PromptTooLong
+
+    cfg, model, mesh, dc, oc, bundle = tiny_setup
+    params = init_model_params(model)
+    eng = Engine(model, params, slots=2, max_len=8)
+    with pytest.raises(PromptTooLong) as ei:
+        eng.submit(Request(0, list(range(1, 11)), max_new=2))   # len 10 > 8
+    assert ei.value.rid == 0 and ei.value.n_tokens == 10
+    assert ei.value.max_len == 8
+    # the queue is untouched: a valid co-tenant still serves normally
+    eng.submit(Request(1, [1, 2, 3], max_new=2))
+    done = eng.run_to_completion()
+    assert [r.rid for r in done] == [1] and len(done[0].out) == 2
+
+
+def test_engine_stall_raises_typed_with_unfinished_rids(tiny_setup):
+    """Exhausting max_steps with work still pending raises EngineStalled
+    naming the unfinished rids (and carrying the finished subset) —
+    previously run_to_completion silently returned only the finished
+    requests and dropped the rest."""
+    from repro.models import init_model_params
+    from repro.serve.engine import EngineStalled
+
+    cfg, model, mesh, dc, oc, bundle = tiny_setup
+    params = init_model_params(model)
+    eng = Engine(model, params, slots=1, max_len=64)
+    eng.submit(Request(0, [1, 2], max_new=2))
+    eng.submit(Request(1, [3, 4], max_new=30))
+    with pytest.raises(EngineStalled) as ei:
+        eng.run_to_completion(max_steps=4)
+    assert ei.value.unfinished == [1]
+    assert [r.rid for r in ei.value.done] == [0]
+
+
 @pytest.mark.slow
 def test_engine_matches_batch_decode(tiny_setup):
     """Engine greedy decode == argmax over model.forward continuation."""
