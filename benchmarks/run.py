@@ -92,6 +92,19 @@ def main() -> None:
                     "(default 1.5: one slot of 4 poisoned mid-decode "
                     "costs ~1.4x in decode steps; 1.5 leaves noise "
                     "margin without tolerating a second eviction)")
+    ap.add_argument("--check-paged", action="store_true",
+                    help="fail unless the paged-KV engine "
+                         "(*/engine_paged) at oversubscribed admission "
+                         "keeps its wall within --paged-ratio of the "
+                         "dense-slot engine (*/engine_dense) AND every "
+                         "request's tokens are bit-identical — the "
+                         "paging-is-invisible gate (rows are timed "
+                         "paired)")
+    ap.add_argument("--paged-ratio", type=float, default=1.0,
+                    metavar="R", help="--check-paged threshold (default "
+                    "1.0: page views are narrower than dense max_len "
+                    "attention, so paged must not LOSE to dense — "
+                    "measured ~1.15x faster, the margin absorbs noise)")
     ap.add_argument("--check-columns", action="store_true",
                     help="fail unless the */stream_ncols{D} column-scaling "
                          "sweep is monotone: per-column latency must drop "
@@ -249,6 +262,28 @@ def main() -> None:
             print(f"check-engine-fault ok: {rec} {ur:.1f}us <= "
                   f"{args.engine_fault_ratio}x {free} {uf:.1f}us "
                   f"({ur / uf:.2f}x), tokens bit-identical")
+    if args.check_paged:
+        by_name = {r["name"]: r for r in rows}
+        pairs = [(n, n.rsplit("engine_paged", 1)[0] + "engine_dense")
+                 for n in by_name if n.endswith("engine_paged")]
+        if not pairs:
+            print("check-paged: no engine_paged rows found",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        for paged, dense in pairs:
+            up = by_name[paged]["us_per_call"]
+            dense_row = by_name.get(dense)
+            ud = dense_row["us_per_call"] if dense_row else None
+            identical = "bit_identical=True" in by_name[paged]["derived"]
+            if ud is None or up > args.paged_ratio * ud or not identical:
+                print(f"check-paged FAILED: {paged}={up:.1f}us vs "
+                      f"{dense}={ud}us (paged wall must stay <= "
+                      f"{args.paged_ratio}x dense) "
+                      f"bit_identical={identical}", file=sys.stderr)
+                raise SystemExit(1)
+            print(f"check-paged ok: {paged} {up:.1f}us <= "
+                  f"{args.paged_ratio}x {dense} {ud:.1f}us "
+                  f"({ud / up:.2f}x speedup), tokens bit-identical")
     if args.check_columns:
         import re
 

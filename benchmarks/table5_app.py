@@ -161,7 +161,7 @@ def _column_rows():
     cls_outputs = ("features", "margin", "class")
     sweep = (1, 2, 4, 8)
     # one column's chunk per D (identical per-column shapes, frames n/D)
-    col0 = {d: column_chunks(raw, window, hop, d)[0][0] for d in sweep}
+    col0 = {d: column_chunks(raw, window, hop, d).chunks[0] for d in sweep}
     fns = [
         # block pinned to the D=8 share so every D runs the same kernel
         # variant and the sweep isolates the work-per-column scaling
@@ -259,8 +259,9 @@ def _hetero_rows():
         return max(min(ts) + (min(bg_times) if d == 0 else 0.0)
                    for d, ts in enumerate(per_col_times))
 
-    chunks_s, _, shares_s = column_chunks(raw, window, hop, D)
-    cols_s = col_slices(shares_s, chunks_s)
+    deal_s = column_chunks(raw, window, hop, D)
+    shares_s = deal_s.shares
+    cols_s = col_slices(shares_s, deal_s.chunks)
 
     # CALIBRATION round: measure the static deal's per-column busy times
     # and replay them through the telemetry (virtual clock: retires of
@@ -294,8 +295,9 @@ def _hetero_rows():
 
     def redeal():
         weights = sched.deal_weights(band=0.3)
-        chunks_w, _, shares_w = column_chunks(raw, window, hop, D, weights)
-        return weights, shares_w, col_slices(shares_w, chunks_w)
+        deal_w = column_chunks(raw, window, hop, D, weights)
+        return weights, deal_w.shares, col_slices(deal_w.shares,
+                                                  deal_w.chunks)
 
     weights, shares_d, cols_d = redeal()
     # one REFINEMENT round — the periodic rebalance in miniature: measure
@@ -540,7 +542,7 @@ def _engine_fault_rows():
                                   temperature=0.8, seed=7,
                                   compiled=compiled, injector=injector)
         for rid, p in prompts.items():
-            eng.submit(Request(rid, list(p), max_new=max_new))
+            eng.add_request(Request(rid, list(p), max_new=max_new))
         t0 = time.perf_counter()
         done = eng.run_to_completion(max_steps=500)
         wall = (time.perf_counter() - t0) * 1e6
@@ -568,6 +570,75 @@ def _engine_fault_rows():
          f"slot 0 killed mid-decode (seq 4), request replayed on "
          f"{slots - 1} survivors;bit_identical={identical};"
          f"recovery_ratio={us_f / us_ok:.2f}x"),
+    ]
+
+
+def _engine_paged_rows():
+    """Paged KV cache vs dense slots at OVERSUBSCRIBED admission.
+
+    Both engines serve 14 short requests (2-token prompts, 12 new tokens)
+    with 4 decode lanes and max_len=256. The dense engine admits at most
+    4 at a time and every decode step attends over the full 256-slot
+    cache rows. The paged engine (`serve/engine.py:PagedEngine`,
+    page_size=16) admits ALL 14 up front — admission is bounded by free
+    pages, and a 14-token worst case fits ONE page — so
+    ``peak_admitted`` hits 14 > 4 lanes, and each decode step gathers a
+    16-wide page view instead of 256 dense columns: the compute saving
+    that pays for the block-table indirection. Tokens must be
+    BIT-IDENTICAL (temperature-sampled per-request streams — the
+    `tests/test_paged.py` invariant); the CI bench smoke gates paged
+    wall <= dense wall AND bit-identity via ``run.py --check-paged``."""
+    import dataclasses as dc
+
+    from repro.configs import get_config, reduced
+    from repro.core import autotune
+    from repro.models import build_model, init_model_params
+    from repro.serve.engine import Engine, PagedEngine, Request
+
+    cfg = dc.replace(reduced(get_config("qwen1.5-0.5b")), vocab_size=64)
+    model = build_model(cfg)
+    params = init_model_params(model, seed=3)
+    compiled = Engine.compile_model(model)
+    slots, max_len, max_new, n_req = 4, 256, 12, 14
+    prompts = {rid: [1 + rid % 8, (rid % 5) + 1] for rid in range(n_req)}
+
+    peak = [0]
+
+    def run_once(paged: bool):
+        cls = PagedEngine if paged else Engine
+        kw = {"page_size": 16} if paged else {}
+        eng = cls(model, params, slots=slots, max_len=max_len,
+                  temperature=0.8, seed=7, compiled=compiled, **kw)
+        for rid, p in prompts.items():
+            eng.add_request(Request(rid, list(p), max_new=max_new))
+        t0 = time.perf_counter()
+        done = eng.run_to_completion(max_steps=500)
+        wall = (time.perf_counter() - t0) * 1e6
+        if paged:
+            peak[0] = eng.peak_admitted
+        return wall, {r.rid: tuple(r.out) for r in done}
+
+    run_once(False)                  # compile + warm both paths
+    run_once(True)
+    walls_d, walls_p = [], []
+    out_d = out_p = None
+    for _ in range(7):               # paired: alternate inside one loop
+        w, out_d = run_once(False)
+        walls_d.append(w)
+        w, out_p = run_once(True)
+        walls_p.append(w)
+    identical = out_d == out_p
+    us_d, us_p = min(walls_d), min(walls_p)
+    autotune.record_pinned("table5/engine_paged", walls_p,
+                           baseline_us=walls_d)
+    return [
+        ("table5/engine_dense", us_d,
+         f"dense-slot LM engine wall, {slots} slots x max_len={max_len}, "
+         f"{n_req} requests x {max_new} tokens (admission bound: slots)"),
+        ("table5/engine_paged", us_p,
+         f"paged KV (page_size=16), admission bound: free pages — "
+         f"peak_admitted={peak[0]} on {slots} lanes;"
+         f"bit_identical={identical};paged_speedup={us_d / us_p:.2f}x"),
     ]
 
 
@@ -618,4 +689,5 @@ def run():
     rows += _depth_rows()
     rows += _fault_rows()
     rows += _engine_fault_rows()
+    rows += _engine_paged_rows()
     return rows

@@ -1,7 +1,8 @@
-"""Serve a small model with batched requests through the continuous-
-batching engine (greedy decode over 4 slots), then re-serve the same
-traffic through the fault-tolerant supervision layer with a slot killed
-mid-decode — the replayed outputs must be bit-identical.
+"""Serve a small model with batched requests through the unified
+admission front-end (typed tickets over the continuous-batching engine,
+greedy decode over 4 slots), then re-serve the same traffic through the
+fault-tolerant supervision layer with a slot killed mid-decode — the
+replayed outputs must be bit-identical.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,6 +15,7 @@ from repro.models import build_model, init_model_params
 from repro.serve.engine import Engine, Request
 from repro.serve.engine_fault import (FaultInjector, FaultTolerantEngine,
                                       VirtualClock)
+from repro.serve.frontend import ServeFrontend
 
 cfg = reduced(get_config("h2o-danube-3-4b"))   # exercises SWA decode
 model = build_model(cfg)
@@ -25,11 +27,13 @@ rng = np.random.default_rng(0)
 prompts = {rid: rng.integers(1, cfg.vocab_size,
                              size=int(rng.integers(2, 6))).tolist()
            for rid in range(6)}
-for rid, p in prompts.items():
-    eng.submit(Request(rid, list(p), max_new=12))
+front = ServeFrontend(engine=eng)
+tickets = [front.submit(Request(rid, list(p), max_new=12))
+           for rid, p in prompts.items()]
 
 t0 = time.perf_counter()
-done = eng.run_to_completion()
+front.run()
+done = [t.result() for t in tickets]
 dt = time.perf_counter() - t0
 for r in sorted(done, key=lambda r: r.rid):
     print(f"req {r.rid}: {r.prompt} -> {r.out}")
@@ -45,7 +49,7 @@ inj = FaultInjector(kill={0: 3}, clock=VirtualClock())
 ft = FaultTolerantEngine(model, params, slots=4, max_len=96,
                          compiled=compiled, injector=inj)
 for rid, p in prompts.items():
-    ft.submit(Request(rid, list(p), max_new=12))
+    ft.add_request(Request(rid, list(p), max_new=12))
 recovered = ft.run_to_completion()
 assert {r.rid: r.out for r in recovered} == {r.rid: r.out for r in done}
 print(f"chaos replay: slot 0 killed mid-decode, {ft.replays} request "

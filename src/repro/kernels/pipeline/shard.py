@@ -41,6 +41,7 @@ analogue of work-stealing between VWR2A columns.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -53,7 +54,7 @@ from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
                                            pipeline_stream_pallas,
                                            stream_frame_count)
 
-__all__ = ["column_frames", "column_shares", "column_chunks",
+__all__ = ["Deal", "column_frames", "column_shares", "column_chunks",
            "requeue_ranges", "pipeline_sharded", "pipeline_stream_sharded",
            "data_mesh_size"]
 
@@ -169,11 +170,29 @@ def requeue_ranges(ranges, n_columns: int,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class Deal:
+    """The result of one column deal (`column_chunks`), named.
+
+    ``chunks`` is the `(D, L)` staged-signal array (None when the signal
+    frames to nothing), ``n_frames`` the global frame count, ``shares``
+    the per-column frame counts (`column_shares`). Iterates like the
+    legacy ``(chunks, n_frames, shares)`` 3-tuple, so both
+    ``deal.shares`` and ``chunks, n, shares = column_chunks(...)``
+    read correctly at call sites."""
+    chunks: object
+    n_frames: int
+    shares: tuple[int, ...]
+
+    def __iter__(self):
+        return iter((self.chunks, self.n_frames, self.shares))
+
+
 def column_chunks(signal, window: int, hop: int, n_columns: int,
-                  weights=None):
+                  weights=None) -> Deal:
     """Split a raw 1-D signal into per-column chunks on hop boundaries.
 
-    Returns ``(chunks, n_frames, shares)``. ``chunks`` is `(D, L)` with
+    Returns a `Deal`. ``Deal.chunks`` is `(D, L)` with
     `L = max(shares)*hop + window - hop`: row d starts at the first
     sample of its first owned frame (`offset_d*hop`, hop-aligned by
     construction) and carries its `window-hop` right-halo (replicated
@@ -187,13 +206,14 @@ def column_chunks(signal, window: int, hop: int, n_columns: int,
     `column_shares` deal (summing to n_frames exactly); rows are padded
     to the widest share's length so shard_map shards agree on shape, and
     a row's frames past its own share are discard-on-trim duplicates of
-    its neighbour's frames. `n_frames == 0` yields (None, 0, (0,)*D).
+    its neighbour's frames. `n_frames == 0` yields
+    ``Deal(None, 0, (0,)*D)``.
     """
     sig = jnp.asarray(signal)
     assert sig.ndim == 1, sig.shape
     n = stream_frame_count(sig.shape[0], window, hop)
     if n == 0:
-        return None, 0, (0,) * n_columns
+        return Deal(None, 0, (0,) * n_columns)
     shares = column_shares(n, n_columns, weights)
     L = max(shares) * hop + (window - hop)
     offsets = [sum(shares[:d]) for d in range(n_columns)]
@@ -202,7 +222,7 @@ def column_chunks(signal, window: int, hop: int, n_columns: int,
         sig = jnp.concatenate(
             [sig, jnp.zeros((total - sig.shape[0],), sig.dtype)])
     chunks = jnp.stack([sig[off * hop: off * hop + L] for off in offsets])
-    return chunks, n, shares
+    return Deal(chunks, n, shares)
 
 
 def _trim(out: dict, n: int) -> dict:
@@ -271,8 +291,8 @@ def pipeline_stream_sharded(signal, taps, w, b, *, window: int, hop: int,
     outputs = canonical_outputs(outputs)
     _check_mesh(mesh, n_columns)
     F, C = w.shape
-    chunks, n, shares = column_chunks(signal, window, hop, n_columns,
-                                      weights)
+    deal = column_chunks(signal, window, hop, n_columns, weights)
+    chunks, n, shares = deal.chunks, deal.n_frames, deal.shares
     if n == 0:
         return empty_outputs(window, F, C, jnp.asarray(signal).dtype,
                              outputs)

@@ -244,6 +244,84 @@ def decode_attention_ring(q, k_cache, v_cache, cl):
 
 
 # ---------------------------------------------------------------------------
+# Paged cache views
+# ---------------------------------------------------------------------------
+#
+# The paged twin of the dense decode cache (`serve/paged.py`): K/V rows
+# live in fixed-size pages of a preallocated pool leaf shaped
+# (n_pages, page_size, *rest), and a per-request block table maps view
+# positions to pages. The three helpers below are the only array ops the
+# paging layer needs — gather a contiguous attention view through the
+# block table, and scatter freshly written rows back (one row per lane
+# after a decode step, whole pages after a prefill). Both decode paths
+# (`decode_attention` linear masking, `decode_attention_ring` modulo
+# slots) run UNCHANGED on the gathered view; a ring leaf's view is
+# sliced to exactly its window so the ring path triggers as on the
+# dense cache. Page 0 is reserved as a scratch target: block-table
+# entries past a request's allocation (and whole rows for empty lanes)
+# point at it, and the positions they back are always masked, so their
+# contribution to the softmax is exactly zero — which is why the paged
+# view is BIT-identical to the dense path, not merely close.
+
+
+def gather_page_view(pool, block_table, *, batch_ax, seq_ax, seq_len):
+    """Materialize one leaf's dense attention view through a block table.
+
+    ``pool``: (n_pages, page_size, *rest); ``block_table``: (L, Q) int32
+    page ids per lane. Returns the leaf laid out exactly as its dense
+    twin — lanes at ``batch_ax``, sequence at ``seq_ax`` — with view
+    length ``min(seq_len, Q*page_size)``: a ring leaf (seq_len = W) is
+    sliced to exactly W so the ring decode path triggers; a linear leaf
+    only spans the pages actually allocated, which is the paged path's
+    compute saving over a dense max_len cache."""
+    L, Q = block_table.shape
+    ps = pool.shape[1]
+    v = pool[block_table]                            # (L, Q, ps, *rest)
+    v = v.reshape((L, Q * ps) + pool.shape[2:])
+    v = v[:, :min(seq_len, Q * ps)]
+    return jnp.moveaxis(v, (0, 1), (batch_ax, seq_ax))
+
+
+def scatter_page_token(pool, view, block_table, pos, *, batch_ax, seq_ax):
+    """Write each lane's one decoded K/V row back to its page.
+
+    ``pos`` is the (L,) absolute cache position the decode step wrote;
+    the view row is ``pos % view_len`` — the identity for a linear view
+    (pos < view_len always) and the ring slot for a ring view, so one
+    formula covers both cache kinds. Lanes whose write lands on the
+    scratch page (empty/padded lanes) collide there harmlessly: scratch
+    rows only ever back masked positions."""
+    ps = pool.shape[1]
+    vm = jnp.moveaxis(view, (batch_ax, seq_ax), (0, 1))  # (L, Sv, *rest)
+    L, sv = vm.shape[0], vm.shape[1]
+    lanes = jnp.arange(L)
+    p = pos % sv
+    rows = vm[lanes, p]                              # (L, *rest)
+    page = block_table[lanes, p // ps]
+    return pool.at[page, p % ps].set(rows.astype(pool.dtype))
+
+
+def scatter_page_prefill(pool, view, block_table, *, batch_ax, seq_ax):
+    """Write a freshly prefilled view into pages — whole pages at a time.
+
+    This is what the dense engine's masked slot-merge collapses into
+    under paging: instead of `where(mask, new, old)` over a full
+    (slots, max_len) cache, the new rows are simply ASSIGNED to the
+    pages the block table names. The view is padded up to a whole page
+    and every covered page is overwritten; rows past a request's
+    allocation land on scratch."""
+    ps = pool.shape[1]
+    vm = jnp.moveaxis(view, (batch_ax, seq_ax), (0, 1))  # (L, Sv, *rest)
+    L, sv = vm.shape[0], vm.shape[1]
+    npg = -(-sv // ps)
+    pad = npg * ps - sv
+    if pad:
+        vm = jnp.pad(vm, ((0, 0), (0, pad)) + ((0, 0),) * (vm.ndim - 2))
+    vm = vm.reshape((L, npg, ps) + vm.shape[2:])
+    return pool.at[block_table[:, :npg]].set(vm.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Full attention block
 # ---------------------------------------------------------------------------
 

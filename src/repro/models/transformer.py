@@ -169,6 +169,35 @@ def cache_schema(cfg, plan, batch: int, max_len: int) -> dict:
     return out
 
 
+def paged_pool_schema(cfg, plan, *, n_pages: int, page_size: int,
+                      max_len: int) -> dict:
+    """The PAGED view of `cache_schema`: one pool leaf per cache leaf.
+
+    Each dense leaf's named "batch" and "seq" axes are replaced by a
+    leading (pages, page) pair — pool shape ``(n_pages, page_size,
+    *rest)`` with the remaining axes in their original order — so a
+    per-request block table plus `models.attention.gather_page_view`
+    reconstructs exactly the dense per-slot layout. Ring/SWA leaves page
+    their W ring slots the same way (page j holds ring slots
+    [j*page_size, (j+1)*page_size)); a leaf WITHOUT a "seq" axis
+    (recurrent rwkv/mamba state — the state is the whole history) cannot
+    be paged and raises ``ValueError``; the serving layer surfaces that
+    as its typed `serve.errors.PagedCacheUnsupported`."""
+    def pool_leaf(p: P) -> P:
+        if "batch" not in p.axes or "seq" not in p.axes:
+            raise ValueError(
+                f"cache leaf with axes {p.axes} has no (batch, seq) pair "
+                f"to page over")
+        b, s = p.axes.index("batch"), p.axes.index("seq")
+        rest = [i for i in range(len(p.shape)) if i not in (b, s)]
+        return P((n_pages, page_size) + tuple(p.shape[i] for i in rest),
+                 ("pages", "page") + tuple(p.axes[i] for i in rest),
+                 0.0, p.dtype)
+
+    return jax.tree.map(pool_leaf, cache_schema(cfg, plan, 1, max_len),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

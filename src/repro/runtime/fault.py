@@ -22,8 +22,10 @@ This module is ALSO the live serving runtime's decision layer
 streaming telemetry's retire feed doubles as the heartbeat source, the
 per-column batch times feed `StragglerDetector`, and `Supervisor.call`
 is the capped-backoff retry the dispatch path wraps transient failures
-in. The fault taxonomy the serving layer injects/handles lives here too,
-so the decision layer never imports the serving layer:
+in. The fault taxonomy the serving layer injects/handles is defined in
+`serve/errors.py` — a dependency-free leaf module rooted at
+`ServeError`, so importing it here creates no layering cycle — and
+re-exported from this module for the decision layer's consumers:
 
   * `TransientDispatchError` — retryable (a flaky dispatch; the column
     survives). `Supervisor`'s default `retry_on` covers it.
@@ -46,35 +48,15 @@ import dataclasses
 import time
 from typing import Callable, Optional
 
+# the typed taxonomy moved under serve/errors.py (ServeError root) in
+# the serving-API normalization; these names stay importable from here
+from repro.serve.errors import (ColumnDeadError,  # noqa: F401 (re-export)
+                                InsufficientHealthyWorkers,
+                                TransientDispatchError)
 
-class InsufficientHealthyWorkers(RuntimeError):
-    """Too few healthy workers/columns to satisfy the requested plan.
-
-    Raised by `elastic_plan` when the healthy-chip count cannot cover the
-    fixed model axis, and by the serving layer when every column of a
-    fleet is dead (`serve/engine.py:ColumnScheduler.mark_dead`) — the
-    caller decides whether to shrink the plan, wait for capacity, or
-    surface the outage."""
-
-
-class TransientDispatchError(RuntimeError):
-    """A retryable dispatch failure (flaky link, preempted worker slot).
-
-    The worker/column is expected to survive; `Supervisor.call` retries
-    these with capped exponential backoff."""
-
-
-class ColumnDeadError(Exception):
-    """A column died and will never answer again.
-
-    NOT a `RuntimeError` on purpose: retry loops whose `retry_on`
-    includes `RuntimeError` must not swallow a death. The serving layer
-    reacts by draining the column and requeuing its unretired work
-    (`serve/fault.py`)."""
-
-    def __init__(self, column: int, message: str = ""):
-        self.column = int(column)
-        super().__init__(message or f"column {column} died")
+__all__ = ["InsufficientHealthyWorkers", "TransientDispatchError",
+           "ColumnDeadError", "HeartbeatMonitor", "StragglerDetector",
+           "elastic_plan", "Supervisor"]
 
 
 @dataclasses.dataclass

@@ -44,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -53,39 +54,11 @@ import numpy as np
 from repro.models import init_cache
 from repro.runtime.fault import (HeartbeatMonitor, InsufficientHealthyWorkers,
                                  StragglerDetector)
-
-
-class PromptTooLong(ValueError):
-    """A submitted prompt exceeds the engine's cache length (``max_len``).
-
-    Raised at `Engine.submit` — admitting it would blow up mid-bucket
-    with a raw NumPy broadcast error (the bucket width is capped at
-    ``max_len`` but the prompt row write is not) and wedge every request
-    sharing the admission bucket. Rejecting at the boundary keeps one
-    bad request from taking down a batch."""
-
-    def __init__(self, rid, n_tokens: int, max_len: int):
-        self.rid = rid
-        self.n_tokens = int(n_tokens)
-        self.max_len = int(max_len)
-        super().__init__(
-            f"request {rid}: prompt of {n_tokens} tokens exceeds the "
-            f"engine cache length max_len={max_len}")
-
-
-class EngineStalled(RuntimeError):
-    """`Engine.run_to_completion` exhausted ``max_steps`` with requests
-    still queued or live. Carries the unfinished ``rids`` and the
-    ``done`` subset — the caller decides whether to resubmit, extend the
-    budget, or surface the outage; silently returning only the finished
-    subset (the old behaviour) dropped work on the floor."""
-
-    def __init__(self, unfinished, done=None):
-        self.unfinished = list(unfinished)
-        self.done = list(done) if done is not None else []
-        super().__init__(
-            f"engine stalled with {len(self.unfinished)} unfinished "
-            f"request(s) after the step budget: rids {self.unfinished}")
+# the typed errors live in the serve/errors.py taxonomy (ServeError
+# root) and are re-exported from here, their historical home
+from repro.serve.errors import (EngineStalled, InsufficientPages,
+                                PagedCacheUnsupported,  # noqa: F401 (re-export)
+                                PromptTooLong)
 
 
 @dataclasses.dataclass
@@ -177,10 +150,26 @@ class Engine:
         via ``Engine(..., compiled=...)``."""
         return jax.jit(model.prefill), jax.jit(model.decode)
 
-    def submit(self, req: Request):
+    def add_request(self, req: Request):
+        """Enqueue one request for admission (the canonical entry point;
+        `serve/frontend.py:ServeFrontend.submit` routes LM work here).
+        Raises the typed `PromptTooLong` for a prompt the cache cannot
+        hold."""
         if len(req.prompt) > self.max_len:
             raise PromptTooLong(req.rid, len(req.prompt), self.max_len)
         self.queue.append(req)
+
+    def submit(self, req: Request, **kwargs):
+        """Deprecated alias of `add_request` — the session API is
+        `serve/frontend.py:ServeFrontend.submit`, which fronts both
+        traffic classes behind one queue. Thin shim; dispatches through
+        ``self.add_request`` so subclass overrides (TTL-aware admission,
+        page-bounded admission) apply."""
+        warnings.warn(
+            "Engine.submit is deprecated; use ServeFrontend.submit "
+            "(unified admission) or Engine.add_request",
+            DeprecationWarning, stacklevel=2)
+        return self.add_request(req, **kwargs)
 
     def _length_bucket(self, n: int) -> int:
         """Pad prompt lengths up to the next power of two so bursty mixed-
@@ -193,6 +182,29 @@ class Engine:
         """Is slot ``s`` a legal admission target? Free AND not poisoned
         (the supervision layer masks faulty slots via ``dead_slots``)."""
         return self.live[s] is None and s not in self.dead_slots
+
+    def _pad_ok(self) -> bool:
+        """Is right-padding a prompt safe for this model's cache?
+
+        Safe for LINEAR causal-attention caches (pad positions only
+        write K/V beyond the prompt, which decode masks via cache_len
+        and overwrites before it becomes visible), but NOT for recurrent
+        state (every consumed token mutates it) nor for sliding-window
+        RING caches (the kept k[-W:] tail and the slot rotation are
+        computed from the padded length, so pad keys evict real prompt
+        keys) — those bucket by exact length instead."""
+        cfg = self.model.cfg
+        return (getattr(cfg, "ssm", None) is None and
+                getattr(cfg, "sliding_window", None) is None)
+
+    def _work_pending(self) -> bool:
+        """Unfinished work anywhere in the engine (queued or live; the
+        paged engine adds its admitted-but-laneless set)."""
+        return bool(self.queue) or any(r is not None for r in self.live)
+
+    def _pending_rids(self) -> set:
+        return ({r.rid for r in self.queue} |
+                {r.rid for r in self.live if r is not None})
 
     def _pre_dispatch_prefill(self, admitted: list) -> list:
         """Hook called with the claimed ``(slot, request)`` pairs before
@@ -238,17 +250,7 @@ class Engine:
                     self.cache = self._merge_slots(cache, [s])
                 self.lens[s] = len(seq)
             return
-        # Right-padding a prompt is safe for LINEAR causal-attention
-        # caches (pad positions only write K/V beyond the prompt, which
-        # decode masks via cache_len and overwrites before it becomes
-        # visible), but NOT for recurrent state (every consumed token
-        # mutates it) nor for sliding-window RING caches (the kept k[-W:]
-        # tail and the slot rotation are computed from the padded length,
-        # so pad keys evict real prompt keys) — those bucket by exact
-        # length instead.
-        cfg = self.model.cfg
-        pad_ok = (getattr(cfg, "ssm", None) is None and
-                  getattr(cfg, "sliding_window", None) is None)
+        pad_ok = self._pad_ok()
         buckets: dict[int, list] = {}
         for s, req in admitted:
             n = len(req.prompt) + len(req.out)
@@ -298,6 +300,11 @@ class Engine:
 
     def _on_finish(self, s: int, req: Request) -> None:
         """Hook after ``req`` completes and frees slot ``s``."""
+
+    def _on_evict(self, req: Request) -> None:
+        """Hook when the supervision layer evicts ``req`` from a faulty
+        slot, BEFORE it requeues (the paged engine frees its pages here
+        so the replay re-admits against fresh ones)."""
 
     def step(self):
         """One decode step for all live slots; returns finished requests."""
@@ -354,13 +361,202 @@ class Engine:
         done = []
         for _ in range(max_steps):
             done += self.step()
-            if not self.queue and all(r is None for r in self.live):
+            if not self._work_pending():
                 return done
-        if not self.queue and all(r is None for r in self.live):
+        if not self._work_pending():
             return done
-        unfinished = sorted({r.rid for r in self.queue} |
-                            {r.rid for r in self.live if r is not None})
-        raise EngineStalled(unfinished, done=done)
+        raise EngineStalled(sorted(self._pending_rids()), done=done)
+
+
+class PagedEngine(Engine):
+    """`Engine` with a paged KV cache: ADMISSION IS BOUNDED BY FREE
+    PAGES, not by ``slots``.
+
+    The dense engine's per-slot caches reserve ``max_len`` rows per slot
+    whether a request uses them or not, and the slot count doubles as
+    the admission bound. Here every request's K/V lives in fixed-size
+    pages of one preallocated pool (`serve/paged.py`: the SPM-bank
+    analogue — one physical memory, time-shared through a block table),
+    so:
+
+    * ``slots`` becomes just the DECODE LANE count (the batch width of
+      one decode dispatch). Admission pulls from the queue while the
+      free-page count covers a request's worst-case footprint
+      (``ceil(min(len + max_new, max_len) / page_size)`` pages, the max
+      over cache leaves — a ring leaf never needs more than its W
+      slots). Admitted requests beyond the lane count wait PREFILLED in
+      ``paused``; when a lane frees, the refill is a block-table row
+      swap — no prefill, no cache copy. With the default pool size
+      (the dense engine's exact memory: ``slots * ceil(max_len /
+      page_size)`` pages) short requests oversubscribe the lanes —
+      ``peak_admitted`` > ``slots`` — which is the whole point.
+    * prefill and decode read/write THROUGH the block table
+      (`serve.paged.paged_prefill` / `paged_decode`, one fused dispatch
+      each — same dispatch count as dense); the dense `_merge_slots`
+      masked merge collapses into page assignment.
+    * decode attends over each lane's ALLOCATED span instead of
+      ``max_len`` — the paged compute saving the ``--check-paged``
+      bench gate holds (`docs/BENCHMARKS.md`) — and masked positions
+      contribute exactly zero, so output is BIT-identical to the dense
+      path for greedy and temperature sampling alike
+      (`tests/test_paged.py`).
+
+    Models whose cache cannot be paged (recurrent state, enc-dec) raise
+    the typed `PagedCacheUnsupported` at construction; a request whose
+    footprint exceeds the POOL raises `InsufficientPages` at admission.
+    The supervision layer stacks on top unchanged
+    (`serve/engine_fault.py:FaultTolerantPagedEngine`)."""
+
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
+                 temperature: float = 0.0, seed: int = 0, compiled=None,
+                 page_size: int = 16, n_pages: Optional[int] = None):
+        from repro.serve import paged as paged_mod
+        self._paged = paged_mod
+        if n_pages is None:
+            # the dense engine's exact K/V memory, repartitioned into
+            # pages (+1 for scratch): oversubscription comes from
+            # requests shorter than max_len, not from extra memory
+            n_pages = slots * (-(-max_len // page_size)) + 1
+        self.pool = paged_mod.PagePool(model, page_size=page_size,
+                                       n_pages=n_pages, max_len=max_len)
+        self.table = paged_mod.PageTable(self.pool)
+        super().__init__(model, params, slots=slots, max_len=max_len,
+                         temperature=temperature, seed=seed,
+                         compiled=compiled)
+        self.cache = None        # every K/V row lives in the pool
+        # admitted (pages held, prefilled) but waiting for a free lane
+        self.paused: list[Request] = []
+        self.peak_admitted = 0   # max concurrent admissions observed
+
+    # ------------------------------------------------------- admission
+
+    def _pages_for(self, req: Request) -> int:
+        total = min(len(req.prompt) + len(req.out) + req.max_new,
+                    self.max_len)
+        return self.pool.pages_for(total)
+
+    def add_request(self, req: Request):
+        """Page-aware admission bound: a request whose worst-case
+        footprint can NEVER fit the pool is rejected with the typed
+        `InsufficientPages` (the paged twin of `PromptTooLong`); one
+        that merely exceeds the current free count waits in the queue
+        for pages to free."""
+        need = self._pages_for(req)
+        if need > self.pool.capacity:
+            raise InsufficientPages(need, self.pool.n_free,
+                                    self.pool.capacity)
+        super().add_request(req)
+
+    def _work_pending(self) -> bool:
+        return bool(self.paused) or super()._work_pending()
+
+    def _pending_rids(self) -> set:
+        return super()._pending_rids() | {r.rid for r in self.paused}
+
+    def _admit(self):
+        # 1. refill free lanes from the paused set first: their K/V is
+        # already paged in, so the "prefill" is a block-table row swap
+        for s in range(self.slots):
+            if not self.paused:
+                break
+            if self._admissible(s):
+                req = self.paused.pop(0)
+                self.live[s] = req
+                self.lens[s] = len(req.prompt) + len(req.out)
+        # 2. admit from the queue while free pages cover the head
+        # request's footprint — THE admission bound; lanes don't gate it
+        admitted: list[Request] = []
+        while self.queue:
+            need = self._pages_for(self.queue[0])
+            if need > self.pool.n_free:
+                break
+            req = self.queue.pop(0)
+            self.table.assign(req.rid, need)
+            admitted.append(req)
+        n_live = sum(r is not None for r in self.live)
+        self.peak_admitted = max(
+            self.peak_admitted, n_live + len(self.paused) + len(admitted))
+        if not admitted:
+            return
+        # 3. claim free lanes for as many as fit; the rest decode later
+        lane_pairs, pausing = [], []
+        for req in admitted:
+            s = next((s for s in range(self.slots)
+                      if self._admissible(s)), None)
+            if s is None:
+                pausing.append(req)
+            else:
+                self.live[s] = req
+                self.lens[s] = len(req.prompt) + len(req.out)
+                lane_pairs.append((s, req))
+        # the supervision hook probes LANE claims (a paused admission has
+        # no slot identity yet; it is probed when it joins a lane's
+        # decode dispatches)
+        kept = self._pre_dispatch_prefill(lane_pairs)
+        jobs = kept + [(None, r) for r in pausing]
+        if not jobs:
+            return
+        # 4. prefill into pages, bucketed exactly like the dense engine
+        pad_ok = self._pad_ok()
+        buckets: dict[int, list] = {}
+        for s, req in jobs:
+            n = len(req.prompt) + len(req.out)
+            buckets.setdefault(self._length_bucket(n) if pad_ok else n,
+                               []).append((s, req))
+        ps = self.pool.page_size
+        for width, group in sorted(buckets.items()):
+            qbt = self._paged.prefill_table_width(self.pool.specs, ps,
+                                                  width)
+            for i0 in range(0, len(group), self.slots):
+                chunk = group[i0:i0 + self.slots]
+                tokens = np.zeros((self.slots, width), np.int32)
+                for row, (s, req) in enumerate(chunk):
+                    seq = req.prompt + req.out
+                    tokens[row, :len(seq)] = seq
+                bt = self.table.block_table(
+                    [req.rid for _, req in chunk] +
+                    [None] * (self.slots - len(chunk)), width=qbt)
+                self._prefill_dispatch(
+                    {"tokens": jnp.asarray(tokens),
+                     "block_table": jnp.asarray(bt)})
+        self.paused.extend(pausing)
+
+    # ------------------------------------------------------- dispatch
+
+    def _prefill_dispatch(self, batch):
+        logits, new_pools = self._paged.paged_prefill(
+            self.model.prefill, self.pool.treedef, self.pool.specs,
+            self.params, {"tokens": batch["tokens"]},
+            tuple(self.pool.leaves), batch["block_table"])
+        self.pool.leaves = list(new_pools)
+        return logits, None
+
+    def _decode_dispatch(self, batch):
+        bt = self.table.block_table(
+            [r.rid if r is not None else None for r in self.live])
+        logits, new_pools = self._paged.paged_decode(
+            self.model.decode, self.pool.treedef, self.pool.specs,
+            self.params, batch, tuple(self.pool.leaves), jnp.asarray(bt))
+        self.pool.leaves = list(new_pools)
+        return logits, None
+
+    # ------------------------------------------------------- lifecycle
+
+    def _on_finish(self, s: int, req: Request) -> None:
+        self.table.release(req.rid)
+        super()._on_finish(s, req)
+
+    def _on_evict(self, req: Request) -> None:
+        # the replay re-admits against FRESH pages; stale ones free now
+        if self.table.holds(req.rid):
+            self.table.release(req.rid)
+        super()._on_evict(req)
+
+    def defrag(self) -> dict[int, int]:
+        """Compact allocated pages onto the lowest ids (see
+        `serve.paged.PageTable.defrag`); safe mid-decode — the
+        continuation is bit-identical."""
+        return self.table.defrag()
 
 
 class ColumnScheduler:
@@ -452,6 +648,7 @@ class ColumnScheduler:
         # into dead-column declarations + stream drains.
         self._clock = clock
         self.dead: set[int] = set()
+        self.withdrawn: set[int] = set()   # drained for re-provisioning
         self.heartbeats = (HeartbeatMonitor(timeout_s=heartbeat_timeout)
                            if heartbeat_timeout is not None else None)
         self.straggler = straggler
@@ -729,10 +926,52 @@ class ColumnScheduler:
             rates[c] = 0.0
         return tuple(rates)
 
-    def open_stream(self, app=None, cfg=None, *, stream_id):
+    # --------------------------------------------- class re-provisioning
+
+    def withdraw(self, column: int):
+        """Administratively DRAIN a column so its device can serve the
+        other traffic class (the unified front-end lends columns to the
+        LM engine under load — `serve/frontend.py:ServeFrontend`).
+        Reuses the `mark_dead` drain machinery — streams re-pin onto
+        survivors, the column leaves placement/heartbeat/deal targets —
+        but records the column as WITHDRAWN, not failed, so `restore`
+        can hand it back. Returns ``(device, moves)`` where ``moves`` is
+        the `mark_dead`-style ``{stream_id: new_device}`` drain to apply
+        via `BiosignalStream.repin`. Withdrawing the last healthy column
+        raises `InsufficientHealthyWorkers` (the stream class keeps a
+        quorum of one)."""
+        if column in self.dead:
+            raise ValueError(f"column {column} is already dead/withdrawn")
+        if len(self.healthy_columns()) < 2:
+            # checked BEFORE the drain so a refused withdraw leaves the
+            # scheduler untouched (mark_dead declares first, then raises)
+            raise InsufficientHealthyWorkers(
+                f"column {column} is the last healthy column; "
+                "cannot withdraw it for re-provisioning")
+        moves = self.mark_dead(column)
+        self.withdrawn.add(column)
+        return self.devices[column], moves
+
+    def restore(self, column: int) -> None:
+        """Return a `withdraw`n column to the placement set: it becomes
+        a placement/rebalance target again and its heartbeat restarts
+        with a fresh grace period. Only withdrawn columns are
+        restorable — a column that FAILED stays dead."""
+        if column not in self.withdrawn:
+            raise ValueError(f"column {column} was not withdrawn")
+        self.withdrawn.discard(column)
+        self.dead.discard(column)
+        if self.heartbeats is not None:
+            self.heartbeats.beat(column, self._clock())
+
+    # ------------------------------------------------------ stream entry
+
+    def place_stream(self, app=None, cfg=None, *, stream_id):
         """Admit + construct in one call: a `BiosignalStream` whose every
         dispatch is committed to the assigned column and (when the
-        scheduler carries telemetry) reports its retires to it."""
+        scheduler carries telemetry) reports its retires to it. (The
+        unified admission path — `serve/frontend.py:ServeFrontend.submit`
+        with a `StreamOpen` — lands here.)"""
         from repro.serve.stream import BiosignalStream
 
         device = self.admit(stream_id)
@@ -740,3 +979,13 @@ class ColumnScheduler:
                                telemetry=self.telemetry,
                                stream_id=stream_id,
                                column=self._placement[stream_id])
+
+    def open_stream(self, app=None, cfg=None, *, stream_id):
+        """Deprecated name for `place_stream` (kept as a shim for one
+        release; the unified front-end made `submit` the public verb)."""
+        warnings.warn(
+            "ColumnScheduler.open_stream is deprecated; use "
+            "ServeFrontend.submit (unified admission) or "
+            "ColumnScheduler.place_stream",
+            DeprecationWarning, stacklevel=2)
+        return self.place_stream(app, cfg, stream_id=stream_id)

@@ -75,41 +75,14 @@ from repro.runtime.fault import (ColumnDeadError, HeartbeatMonitor,
                                  InsufficientHealthyWorkers,
                                  StragglerDetector, Supervisor,
                                  TransientDispatchError)
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, PagedEngine, Request
+# QueueFull/RequestExpired live in the serve/errors.py taxonomy
+# (ServeError root) and are re-exported from here, their historical home
+from repro.serve.errors import QueueFull, RequestExpired
 from repro.serve.fault import ColumnHungError, FaultInjector, VirtualClock
 
 __all__ = ["QueueFull", "RequestExpired", "FaultTolerantEngine",
-           "FaultInjector", "VirtualClock"]
-
-
-class QueueFull(RuntimeError):
-    """The bounded admission queue is at capacity — typed backpressure.
-
-    The caller sheds load or retries later; the engine never grows the
-    queue past ``max_queue``. Carries the rejected ``rid`` and the queue
-    ``depth`` at rejection time."""
-
-    def __init__(self, rid, depth: int, max_queue: int):
-        self.rid = rid
-        self.depth = int(depth)
-        self.max_queue = int(max_queue)
-        super().__init__(
-            f"request {rid} rejected: admission queue at capacity "
-            f"({depth}/{max_queue})")
-
-
-class RequestExpired(RuntimeError):
-    """A request's TTL elapsed before it could be admitted.
-
-    Raised at `FaultTolerantEngine.submit` for a dead-on-arrival TTL;
-    requests that expire while QUEUED are dropped into
-    `FaultTolerantEngine.expired` at the next step instead (there is no
-    caller on the stack to throw to)."""
-
-    def __init__(self, rid, ttl: float):
-        self.rid = rid
-        self.ttl = float(ttl)
-        super().__init__(f"request {rid} expired (ttl {ttl:g}s)")
+           "FaultTolerantPagedEngine", "FaultInjector", "VirtualClock"]
 
 
 class FaultTolerantEngine(Engine):
@@ -127,7 +100,7 @@ class FaultTolerantEngine(Engine):
     >>> eng = FaultTolerantEngine(model, params, slots=4,
     ...                           heartbeat_timeout=5.0,
     ...                           injector=FaultInjector(kill={0: 3}))
-    >>> eng.submit(Request(0, [1, 2, 3], max_new=8))
+    >>> eng.add_request(Request(0, [1, 2, 3], max_new=8))
     >>> done = eng.run_to_completion()   # bit-identical to fault-free
     """
 
@@ -138,10 +111,13 @@ class FaultTolerantEngine(Engine):
                  heartbeat_timeout: Optional[float] = None,
                  straggler: Optional[StragglerDetector] = None,
                  injector: Optional[FaultInjector] = None,
-                 retry: Optional[Supervisor] = None, clock=None):
+                 retry: Optional[Supervisor] = None, clock=None, **kwargs):
+        # extra kwargs flow to the next class in the MRO, so the paged
+        # composition (`FaultTolerantPagedEngine`) can thread
+        # page_size/n_pages through without re-declaring them here
         super().__init__(model, params, slots=slots, max_len=max_len,
                          temperature=temperature, seed=seed,
-                         compiled=compiled)
+                         compiled=compiled, **kwargs)
         self.max_queue = max_queue
         self.default_ttl = default_ttl
         self.injector = injector
@@ -166,18 +142,19 @@ class FaultTolerantEngine(Engine):
         """Slots not poisoned — the only legal admission targets."""
         return [s for s in range(self.slots) if s not in self.dead_slots]
 
-    def submit(self, req: Request, *, ttl: Optional[float] = None):
+    def add_request(self, req: Request, *, ttl: Optional[float] = None):
         """Bounded, TTL-aware admission. Raises `QueueFull` when the
         queue is at ``max_queue`` (backpressure — the unbounded
         ``queue.append`` is exactly what this replaces), `RequestExpired`
         for a dead-on-arrival TTL, and the base engine's `PromptTooLong`
-        for a prompt the cache cannot hold."""
+        for a prompt the cache cannot hold. (The deprecated
+        ``Engine.submit`` shim forwards here.)"""
         ttl = self.default_ttl if ttl is None else ttl
         if ttl is not None and ttl <= 0:
             raise RequestExpired(req.rid, ttl)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             raise QueueFull(req.rid, len(self.queue), self.max_queue)
-        super().submit(req)
+        super().add_request(req)
         if ttl is not None:
             self.deadlines[req.rid] = self.clock() + ttl
 
@@ -283,6 +260,7 @@ class FaultTolerantEngine(Engine):
         if self.heartbeats is not None:
             self.heartbeats.forget(s)   # idle slots are not monitored
         self.deadlines.pop(req.rid, None)
+        super()._on_finish(s, req)      # paged composition frees pages
 
     # -------------------------------------------------- the closed loop
 
@@ -302,6 +280,7 @@ class FaultTolerantEngine(Engine):
         if req is not None:
             self.live[s] = None
             self.lens[s] = 0
+            self._on_evict(req)   # paged composition frees stale pages
             self._requeue(req)
         self.evictions += 1
 
@@ -342,11 +321,30 @@ class FaultTolerantEngine(Engine):
         `runtime.fault.InsufficientHealthyWorkers` when work is pending
         and no healthy slot remains."""
         self._expire_queued()
-        if not self.healthy_slots() and (
-                self.queue or any(r is not None for r in self.live)):
+        if not self.healthy_slots() and self._work_pending():
             raise InsufficientHealthyWorkers(
                 "every engine slot is poisoned; pending requests cannot "
                 "be served")
         finished = super().step()
         self._supervise()
         return finished
+
+
+class FaultTolerantPagedEngine(FaultTolerantEngine, PagedEngine):
+    """The paged engine under the full supervision closed loop — pure
+    cooperative composition, no new code paths.
+
+    The MRO stacks the two layers the way the hooks were designed for:
+    admission runs FT's bounded/TTL `add_request` over the paged
+    `InsufficientPages` check; `_prefill_dispatch`/`_decode_dispatch`
+    wrap the paged fused dispatches in FT's probe/retry/counter;
+    eviction (`_evict` → `_on_evict`) frees the dead slot's pages before
+    the deterministic front-of-queue requeue, so a replay re-prefills
+    prompt + generated prefix into FRESH pages; `_on_finish` releases
+    pages after FT drops the monitors. Per-request sampling streams make
+    the replayed continuation bit-identical to both the fault-free paged
+    run and the dense run (`tests/test_engine_fault.py`).
+
+    Accepts the union of both constructors' keyword arguments
+    (``page_size``/``n_pages`` ride through `FaultTolerantEngine`'s
+    ``**kwargs``)."""

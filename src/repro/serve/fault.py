@@ -91,15 +91,9 @@ class VirtualClock:
         return self.t
 
 
-class ColumnHungError(Exception):
-    """A simulated WEDGED column: the dispatch neither completes nor
-    errors (no retire, so no heartbeat). Only the injector raises this —
-    a real hung dispatch just never returns — and only the supervision
-    loop's heartbeat timeout can declare the column dead."""
-
-    def __init__(self, column: int):
-        self.column = int(column)
-        super().__init__(f"column {column} is hung (no retire, no error)")
+# ColumnHungError moved under the serve/errors.py taxonomy (ServeError
+# root); re-imported here so its historical home keeps working
+from repro.serve.errors import ColumnHungError  # noqa: E402,F401
 
 
 @dataclasses.dataclass

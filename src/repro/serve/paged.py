@@ -1,0 +1,309 @@
+"""Paged KV cache: fixed-size pages in one preallocated pool, per-request
+block tables, and the jitted gather/scatter that turns pages back into
+dense attention views.
+
+THE PAPER MAPPING: the pool is the software analogue of VWR2A's
+scratchpad banks — one fixed physical memory, time-shared between
+tenants through an indirection table — where the dense engine's
+per-slot caches were per-tenant private SPMs sized for the worst case
+(``slots * max_len`` rows each, mostly empty). Under paging a request
+holds exactly ``ceil(need / page_size)`` pages, so ADMISSION IS BOUNDED
+BY FREE PAGES, not by the decode batch width: the engine oversubscribes
+its lanes (`serve/engine.py:PagedEngine`) the way the vLLM/levanter
+`PageTable` design oversubscribes sequence slots.
+
+LAYOUT. One logical page-id space is shared by ALL cache leaves: page j
+is row j of every pool leaf (`models.transformer.paged_pool_schema`
+shapes each leaf ``(n_pages, page_size, *rest)``). A request holding
+pages ``(p0, p1, ...)`` stores the K/V of absolute positions
+``[i*page_size, (i+1)*page_size)`` in page ``p_i`` — for a ring/SWA
+leaf the positions are the W ring slots, so the ring decode path works
+unchanged on the gathered view. PAGE 0 IS SCRATCH: never allocated,
+block-table padding for empty lanes and positions past a request's
+allocation points at it, and those positions are always masked — their
+softmax contribution is exactly zero, which is why paged output is
+BIT-identical to the dense path (pinned in `tests/test_paged.py`).
+
+DISPATCH. `paged_prefill` / `paged_decode` are module-level jits keyed
+on (model fn, treedef, leaf specs) so every engine over the same model
+shares one compilation, exactly like `Engine.compile_model`. Each is
+ONE dispatch per engine step — gather, model, scatter fused in a single
+jit — so the paged engine pays the same dispatch count as dense while
+its decode attends over the allocated span instead of ``max_len``
+(`docs/BENCHMARKS.md`, the ``--check-paged`` gate).
+
+Alloc is lowest-id-first off a heap, free returns pages for immediate
+reuse, and `PageTable.defrag` compacts the allocated set back to the
+lowest ids (one jitted row permutation per pool leaf) — allocation
+never fragments (any free page serves any request through the table),
+so defrag is a locality/compaction pass, not a correctness one, and the
+tests pin that decoding straight through a defrag stays bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as att
+from repro.models import transformer as tfm
+from repro.models.layers import P
+from repro.serve.errors import InsufficientPages, PagedCacheUnsupported
+
+SCRATCH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Static per-leaf paging metadata (hashable — it keys the jits).
+
+    ``shape``/``dtype`` are the per-request dense leaf (batch size 1);
+    ``seq_len`` its sequence capacity (max_len, or W for a ring leaf);
+    ``ring`` whether the leaf is a sliding-window ring (its view must be
+    sliced to exactly W for the ring decode path to trigger)."""
+    batch_ax: int
+    seq_ax: int
+    seq_len: int
+    ring: bool
+    shape: tuple
+    dtype: str
+
+
+def leaf_specs(model, max_len: int):
+    """(treedef, specs) for a model's cache tree; raises the typed
+    `PagedCacheUnsupported` for models whose cache cannot be paged
+    (recurrent state has no seq axis; enc-dec admits token-at-a-time)."""
+    cfg = model.cfg
+    if getattr(cfg, "ssm", None) is not None:
+        raise PagedCacheUnsupported(
+            "recurrent state (rwkv/mamba) has no sequence axis to page "
+            "over; serve SSM models on the dense Engine")
+    if getattr(cfg, "is_encdec", False):
+        raise PagedCacheUnsupported(
+            "enc-dec decoders admit token-at-a-time against an encoder "
+            "context; serve them on the dense Engine")
+    schema = model.cache_schema(1, max_len)
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, P))
+    specs = []
+    for p in leaves:
+        if "batch" not in p.axes or "seq" not in p.axes:
+            raise PagedCacheUnsupported(
+                f"cache leaf with axes {p.axes} has no (batch, seq) pair")
+        b, s = p.axes.index("batch"), p.axes.index("seq")
+        assert b < s, (p.axes, "paged gather assumes batch before seq")
+        seq_len = p.shape[s]
+        specs.append(LeafSpec(b, s, seq_len, seq_len < max_len,
+                              tuple(p.shape),
+                              np.dtype(p.dtype or np.float32).name))
+    return treedef, tuple(specs)
+
+
+class PagePool:
+    """The preallocated physical pool: one leaf per cache leaf, a shared
+    free list over the logical page-id space, page 0 reserved as
+    scratch. ``capacity`` is the allocatable page count."""
+
+    def __init__(self, model, *, page_size: int = 16, n_pages: int = 64,
+                 max_len: int = 256):
+        assert page_size >= 1 and n_pages >= 2, (page_size, n_pages)
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        self.max_len = int(max_len)
+        self.treedef, self.specs = leaf_specs(model, max_len)
+        pool_schema = tfm.paged_pool_schema(
+            model.cfg, model.plan, n_pages=n_pages, page_size=page_size,
+            max_len=max_len)
+        flat = jax.tree.flatten(pool_schema,
+                                is_leaf=lambda x: isinstance(x, P))[0]
+        self.leaves = [jnp.zeros(p.shape, p.dtype or jnp.float32)
+                       for p in flat]
+        self._free: list[int] = list(range(1, n_pages))  # heap, 0=scratch
+        self._held: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - 1          # page 0 is scratch
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Worst-case page footprint of a sequence of ``n_tokens``: the
+        max over leaves of the pages covering the leaf's share of it (a
+        ring leaf never needs more than its W slots)."""
+        ps = self.page_size
+        return max(-(-min(int(n_tokens), sp.seq_len) // ps)
+                   for sp in self.specs)
+
+    def alloc(self, n: int) -> tuple[int, ...]:
+        """Allocate ``n`` pages, lowest ids first (deterministic: the
+        same admission order always yields the same tables). Raises the
+        typed `InsufficientPages` on over-allocation."""
+        if n > len(self._free):
+            raise InsufficientPages(n, len(self._free), self.capacity)
+        ids = tuple(heapq.heappop(self._free) for _ in range(n))
+        self._held.update(ids)
+        return ids
+
+    def free(self, ids) -> None:
+        for i in ids:
+            assert i in self._held, f"freeing unallocated page {i}"
+            self._held.discard(i)
+            heapq.heappush(self._free, i)
+
+
+class PageTable:
+    """Per-request block tables over a `PagePool`: who holds which
+    pages, and the (lanes, Q) int32 tables the jitted dispatches gather
+    through."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._pages: dict = {}          # rid -> tuple of page ids
+
+    def assign(self, rid, n_pages: int) -> tuple[int, ...]:
+        assert rid not in self._pages, f"rid {rid} already holds pages"
+        ids = self.pool.alloc(n_pages)
+        self._pages[rid] = ids
+        return ids
+
+    def release(self, rid) -> None:
+        self.pool.free(self._pages.pop(rid))
+
+    def pages(self, rid) -> tuple[int, ...]:
+        return self._pages[rid]
+
+    def holds(self, rid) -> bool:
+        return rid in self._pages
+
+    def holders(self) -> list:
+        return sorted(self._pages)
+
+    def block_table(self, rids, width: int | None = None) -> np.ndarray:
+        """(len(rids), width) int32 table; ``None`` entries (empty
+        lanes) and columns past a request's allocation pad with the
+        scratch page. ``width`` defaults to the widest holder present
+        (min 1)."""
+        rows = [self._pages.get(r, ()) if r is not None else ()
+                for r in rids]
+        q = width if width is not None else max(
+            [len(r) for r in rows] + [1])
+        bt = np.full((len(rows), q), SCRATCH_PAGE, np.int32)
+        for i, r in enumerate(rows):
+            k = min(len(r), q)     # a prefill table may be narrower
+            bt[i, :k] = r[:k]      # than a request's full allocation
+        return bt
+
+    def defrag(self) -> dict[int, int]:
+        """Compact the allocated set onto the lowest page ids.
+
+        Returns the ``{old: new}`` moves applied; block tables are
+        rewritten and every pool leaf's moved rows are copied in one
+        jitted permutation. Allocation itself never fragments (the
+        table indirection makes pages interchangeable), so this is a
+        compaction/locality pass — decode through a mid-stream defrag
+        is bit-identical (pinned in `tests/test_paged.py`)."""
+        held = sorted(self.pool._held)
+        targets = list(range(1, len(held) + 1))
+        moves = {old: new for old, new in zip(held, targets) if old != new}
+        if not moves:
+            return moves
+        src = jnp.asarray(list(moves.keys()), jnp.int32)
+        dst = jnp.asarray(list(moves.values()), jnp.int32)
+        self.pool.leaves = list(_permute_pages(tuple(self.pool.leaves),
+                                               src, dst))
+        self._pages = {rid: tuple(moves.get(p, p) for p in pages)
+                       for rid, pages in self._pages.items()}
+        self.pool._held = set(targets)
+        self.pool._free = [p for p in range(1, self.pool.n_pages)
+                           if p not in self.pool._held]
+        heapq.heapify(self.pool._free)
+        return moves
+
+
+@jax.jit
+def _permute_pages(pools, src, dst):
+    """Copy rows ``src`` onto rows ``dst`` in every pool leaf (defrag's
+    data movement; the gather of ``src`` is evaluated before the
+    scatter, so overlapping src/dst sets permute correctly)."""
+    return tuple(pool.at[dst].set(pool[src]) for pool in pools)
+
+
+# ---------------------------------------------------------------------------
+# The two dispatches (module-level jits: shared across engine instances)
+# ---------------------------------------------------------------------------
+
+
+def _view_len(spec: LeafSpec, q: int, ps: int) -> int:
+    # ring leaves MUST view exactly W (that is what triggers the ring
+    # decode path); linear leaves view the allocated page span, capped
+    # at their dense capacity — the paged compute saving
+    return min(spec.seq_len, q * ps)
+
+
+def _gather_views(pools, bt, specs):
+    return [att.gather_page_view(pool, bt, batch_ax=sp.batch_ax,
+                                 seq_ax=sp.seq_ax, seq_len=sp.seq_len)
+            for pool, sp in zip(pools, specs)]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def paged_decode(decode_fn, treedef, specs, params, batch, pools, bt):
+    """One fused decode step through the block table: gather per-leaf
+    views, run the model's decode on them (linear and ring cache paths
+    unchanged), scatter each lane's newly written row back to its page.
+    Returns ``(logits, new_pools)``."""
+    views = _gather_views(pools, bt, specs)
+    cache = jax.tree.unflatten(treedef, views)
+    logits, new_cache = decode_fn(params, batch, cache)
+    new_views = jax.tree.flatten(new_cache)[0]
+    pos = jnp.broadcast_to(jnp.atleast_1d(batch["cache_len"]),
+                           (bt.shape[0],))
+    new_pools = tuple(
+        att.scatter_page_token(pool, v, bt, pos, batch_ax=sp.batch_ax,
+                               seq_ax=sp.seq_ax)
+        for pool, v, sp in zip(pools, new_views, specs))
+    return logits, new_pools
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def paged_prefill(prefill_fn, treedef, specs, params, batch, pools, bt):
+    """One fused prefill through the block table: run the model's
+    prefill into a zero view sized to the batch's token width (a ring
+    leaf views its full W), then ASSIGN the written rows to the pages
+    the table names — the paged replacement for the dense engine's
+    masked slot merge. Returns ``(last_logits, new_pools)``."""
+    L, q = bt.shape
+    ps = pools[0].shape[1]
+    width = batch["tokens"].shape[1]
+    views = []
+    for sp in specs:
+        sv = sp.seq_len if sp.ring else min(sp.seq_len, -(-width // ps) * ps)
+        shape = list(sp.shape)
+        shape[sp.batch_ax] = L
+        shape[sp.seq_ax] = sv
+        views.append(jnp.zeros(shape, sp.dtype))
+    cache = jax.tree.unflatten(treedef, views)
+    logits, new_cache = prefill_fn(params, batch, cache)
+    new_views = jax.tree.flatten(new_cache)[0]
+    new_pools = tuple(
+        att.scatter_page_prefill(pool, v, bt, batch_ax=sp.batch_ax,
+                                 seq_ax=sp.seq_ax)
+        for pool, v, sp in zip(pools, new_views, specs))
+    return logits, new_pools
+
+
+def prefill_table_width(specs, page_size: int, width: int) -> int:
+    """Block-table width a prefill of ``width`` tokens needs: the max
+    over leaves of the pages its prefill view covers."""
+    return max(
+        -(-(sp.seq_len if sp.ring
+            else min(sp.seq_len, -(-width // page_size) * page_size))
+          // page_size)
+        for sp in specs)

@@ -128,3 +128,23 @@ def test_per_request_stream_is_key_exact(setup):
         expect.append(tok)
         seq.append(tok)
     assert list(out) == expect
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("page_size,slots", [(4, 2), (16, 3)])
+def test_paged_engine_joins_the_invariant(setup, temperature, page_size,
+                                          slots):
+    """The paged engine is a fourth placement axis: page size and lane
+    count change which page backs which token, never the tokens. Same
+    per-request streams, same outputs as the dense sweep's reference."""
+    from repro.serve.engine import PagedEngine
+    model, params, compiled = setup
+    rids = [0, 1, 2, 3]
+    ref = _serve(setup, rids, slots=4, temperature=temperature)
+    eng = PagedEngine(model, params, slots=slots, max_len=64,
+                      temperature=temperature, seed=7, compiled=compiled,
+                      page_size=page_size)
+    for rid in rids:
+        eng.add_request(Request(rid, list(PROMPTS[rid]), max_new=5))
+    done = eng.run_to_completion(max_steps=500)
+    assert {r.rid: tuple(r.out) for r in done} == ref

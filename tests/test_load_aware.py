@@ -92,8 +92,8 @@ def test_weighted_chunks_hop_aligned_and_cover(window, hop, n_samples,
     signal (zero-pad past the end)."""
     sig = np.arange(n_samples, dtype=np.float32)
     n = frame_count(n_samples, window, hop)
-    chunks, n_out, shares = column_chunks(sig, window, hop, n_columns,
-                                          weights)
+    deal = column_chunks(sig, window, hop, n_columns, weights)
+    chunks, n_out, shares = deal.chunks, deal.n_frames, deal.shares
     assert n_out == n and sum(shares) == n
     n_max = max(shares)
     assert chunks.shape == (n_columns, n_max * hop + window - hop)

@@ -1,0 +1,239 @@
+"""Paged KV cache (`serve/paged.py` + `serve/engine.py:PagedEngine`).
+
+THE INVARIANT under test: paging is INVISIBLE in the tokens. For any
+(page size, request mix, eviction/defrag schedule), `PagedEngine`'s
+outputs are **bit-identical** to the dense `Engine`'s, greedy AND
+temperature-sampled — masked positions (scratch garbage included)
+contribute exactly zero to the attention softmax, so gathering a
+short page-quantized view changes nothing downstream. On top of that
+ride the pool-accounting properties (lowest-first alloc, scratch page
+never allocated, every page freed by the end) and the headline
+capability the redesign buys: ADMISSION BOUNDED BY FREE PAGES, i.e.
+more concurrent requests in flight than the engine has decode lanes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model, init_model_params
+from repro.serve.engine import Engine, PagedEngine, Request
+from repro.serve.errors import InsufficientPages, PagedCacheUnsupported
+from repro.serve.paged import SCRATCH_PAGE, PagePool, PageTable
+
+MAX_LEN, MAX_NEW = 64, 6
+PROMPTS = {0: [3, 1, 4, 1], 1: [5, 9, 2], 2: [6, 5], 3: [8, 9, 7, 9, 3],
+           4: [2, 3, 8], 5: [4, 6, 2, 6]}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduced(get_config("qwen1.5-0.5b")),
+                              vocab_size=64)
+    model = build_model(cfg)
+    params = init_model_params(model, seed=3)
+    compiled = Engine.compile_model(model)
+    return model, params, compiled
+
+
+@pytest.fixture(scope="module")
+def reference(setup):
+    cache = {}
+
+    def get(temperature: float):
+        if temperature not in cache:
+            cache[temperature] = _serve(setup, Engine, temperature)[0]
+        return cache[temperature]
+
+    return get
+
+
+def _engine(setup, cls, temperature, *, slots=2, **kw):
+    model, params, compiled = setup
+    return cls(model, params, slots=slots, max_len=MAX_LEN,
+               temperature=temperature, seed=7, compiled=compiled, **kw)
+
+
+def _serve(setup, cls, temperature, *, slots=2, rids=tuple(PROMPTS), **kw):
+    eng = _engine(setup, cls, temperature, slots=slots, **kw)
+    for rid in rids:
+        eng.add_request(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    done = eng.run_to_completion(max_steps=500)
+    assert sorted(r.rid for r in done) == sorted(rids)
+    return {r.rid: tuple(r.out) for r in done}, eng
+
+
+# --------------------------------------------------- pool/table accounting
+
+def test_pool_alloc_lowest_first_and_scratch_reserved(setup):
+    model = setup[0]
+    pool = PagePool(model, page_size=8, n_pages=9, max_len=MAX_LEN)
+    assert pool.capacity == 8 and pool.n_free == 8
+    a = pool.alloc(3)
+    assert a == (1, 2, 3)                      # lowest ids first
+    assert SCRATCH_PAGE not in a
+    b = pool.alloc(2)
+    assert b == (4, 5)
+    pool.free((2, 3))
+    assert pool.n_free == 5
+    # freed ids are reissued before untouched higher ones
+    assert pool.alloc(2) == (2, 3)
+
+
+def test_pool_insufficient_pages_typed(setup):
+    pool = PagePool(setup[0], page_size=8, n_pages=5, max_len=MAX_LEN)
+    pool.alloc(3)
+    with pytest.raises(InsufficientPages) as ei:
+        pool.alloc(2)
+    assert ei.value.need == 2 and ei.value.free == 1
+    assert ei.value.capacity == 4
+
+
+def test_pages_for_is_page_quantized(setup):
+    pool = PagePool(setup[0], page_size=8, n_pages=9, max_len=MAX_LEN)
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(8) == 1
+    assert pool.pages_for(9) == 2
+    # footprint saturates at max_len
+    assert pool.pages_for(10_000) == MAX_LEN // 8
+
+
+def test_block_table_scratch_padding_and_truncation(setup):
+    pool = PagePool(setup[0], page_size=8, n_pages=9, max_len=MAX_LEN)
+    table = PageTable(pool)
+    table.assign("a", 3)
+    table.assign("b", 1)
+    bt = table.block_table(["a", None, "b"])
+    assert bt.shape == (3, 3)                  # width = widest holder
+    assert tuple(bt[0]) == table.pages("a")
+    assert (bt[1] == SCRATCH_PAGE).all()       # empty lane: all scratch
+    assert bt[2][0] == table.pages("b")[0]
+    assert (bt[2][1:] == SCRATCH_PAGE).all()
+    # a narrower explicit width truncates instead of raising (prefill
+    # tables only address the pages the prompt touches)
+    assert table.block_table(["a"], width=2).shape == (1, 2)
+    table.release("a")
+    assert not table.holds("a") and pool.n_free == 7
+
+
+def test_defrag_compacts_and_moves_rows(setup):
+    pool = PagePool(setup[0], page_size=8, n_pages=12, max_len=MAX_LEN)
+    table = PageTable(pool)
+    table.assign("a", 2)                       # pages (1, 2)
+    table.assign("b", 2)                       # pages (3, 4)
+    table.assign("c", 1)                       # page  (5,)
+    # stamp a recognizable value into b's first page on every leaf
+    marked = table.pages("b")[0]
+    pool.leaves = [leaf.at[marked].set(7.0) for leaf in pool.leaves]
+    table.release("a")                         # holes at 1, 2
+    moves = table.defrag()
+    # the held set compacts onto the lowest ids; 5 held pages -> 1..5
+    assert set(moves.keys()) <= {3, 4, 5}
+    held = table.pages("b") + table.pages("c")
+    assert sorted(held) == [1, 2, 3]
+    new_home = moves[marked]
+    for leaf in pool.leaves:
+        assert (np.asarray(leaf[new_home]) == 7.0).all()
+    # page ids freed by the compaction are allocatable again
+    assert pool.n_free == pool.capacity - 3
+
+
+# ------------------------------------------------------ dense equivalence
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("page_size", [4, 16])
+def test_paged_matches_dense_bit_identical(setup, reference, temperature,
+                                           page_size):
+    """The tentpole property: same tokens, any page size, greedy and
+    temperature-sampled — paging is invisible in the output."""
+    out, eng = _serve(setup, PagedEngine, temperature,
+                      page_size=page_size)
+    assert out == reference(temperature)
+    assert eng.pool.n_free == eng.pool.capacity   # every page freed
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_oversubscription_beyond_slots(setup, reference, temperature):
+    """The capability the redesign buys: with short requests, MORE
+    concurrent admissions than decode lanes (`peak_admitted > slots`),
+    bounded by free pages — and still bit-identical to dense."""
+    out, eng = _serve(setup, PagedEngine, temperature, slots=2,
+                      page_size=8)
+    assert out == reference(temperature)
+    assert eng.peak_admitted > eng.slots
+    assert eng.pool.n_free == eng.pool.capacity
+
+
+def test_submission_order_invariance_paged(setup):
+    """Per-request sampling streams survive the paged path: admission
+    order permutes page assignment and lane placement, tokens don't."""
+    eng = _engine(setup, PagedEngine, 0.9, page_size=8)
+    for rid in [5, 2, 0, 4, 1, 3]:
+        eng.add_request(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    perm = {r.rid: tuple(r.out)
+            for r in eng.run_to_completion(max_steps=500)}
+    ref = _serve(setup, PagedEngine, 0.9, page_size=8)[0]
+    assert perm == ref
+
+
+def test_defrag_mid_decode_bit_identical(setup, reference):
+    """Compacting pages between engine steps — after some requests have
+    finished and left holes — must not change a single token."""
+    eng = _engine(setup, PagedEngine, 0.8, page_size=4)
+    for rid in PROMPTS:
+        eng.add_request(Request(rid, list(PROMPTS[rid]), max_new=MAX_NEW))
+    done = []
+    steps = 0
+    while eng._work_pending():
+        done += eng.step()
+        steps += 1
+        if done:                     # holes exist: compact every step
+            eng.defrag()
+        assert steps < 500
+    out = {r.rid: tuple(r.out) for r in done}
+    assert out == reference(0.8)
+    assert eng.pool.n_free == eng.pool.capacity
+
+
+def test_request_larger_than_pool_typed(setup):
+    model, params, compiled = setup
+    eng = PagedEngine(model, params, slots=2, max_len=MAX_LEN,
+                      compiled=compiled, page_size=8, n_pages=3)
+    with pytest.raises(InsufficientPages):
+        eng.add_request(Request(0, list(range(2, 30)), max_new=MAX_NEW))
+    assert not eng.queue                # rejected, not half-admitted
+
+
+# ----------------------------------------------- other cache geometries
+
+def test_ring_sliding_window_paged_matches_dense():
+    """The ring (sliding-window) cache leaf pages too: its view is
+    always exactly W wide so the ring-decode path still triggers."""
+    cfg = dataclasses.replace(reduced(get_config("h2o-danube-3-4b")),
+                              vocab_size=64)
+    model = build_model(cfg)
+    params = init_model_params(model, seed=3)
+    compiled = Engine.compile_model(model)
+    args = dict(slots=2, max_len=MAX_LEN, temperature=0.8, seed=7,
+                compiled=compiled)
+    outs = []
+    for cls, kw in ((Engine, {}), (PagedEngine, {"page_size": 8})):
+        eng = cls(model, params, **args, **kw)
+        for rid in (0, 1, 2, 3):
+            eng.add_request(Request(rid, list(PROMPTS[rid]),
+                                    max_new=MAX_NEW))
+        outs.append({r.rid: tuple(r.out)
+                     for r in eng.run_to_completion(max_steps=500)})
+    assert outs[0] == outs[1]
+
+
+def test_recurrent_state_rejected_typed():
+    """A cache with no (batch, seq) leaves cannot be paged; the typed
+    `PagedCacheUnsupported` fires at construction, not mid-serve."""
+    cfg = dataclasses.replace(reduced(get_config("rwkv6-7b")),
+                              vocab_size=64)
+    model = build_model(cfg)
+    params = init_model_params(model, seed=3)
+    with pytest.raises(PagedCacheUnsupported):
+        PagedEngine(model, params, slots=2, max_len=MAX_LEN)

@@ -106,7 +106,8 @@ def test_column_chunk_arithmetic():
     sig = np.arange(512 * 9, dtype=np.float32)
     n = frame_count(sig.shape[0], window, hop)
     n_d = column_frames(n, D)
-    chunks, n_out, shares = column_chunks(sig, window, hop, D)
+    deal = column_chunks(sig, window, hop, D)
+    chunks, n_out, shares = deal.chunks, deal.n_frames, deal.shares
     assert n_out == n
     assert shares == (n_d,) * D
     assert chunks.shape == (D, n_d * hop + window - hop)
@@ -117,8 +118,11 @@ def test_column_chunk_arithmetic():
         np.testing.assert_array_equal(got[: want.shape[0]], want)
         assert (got[want.shape[0]:] == 0).all()     # zero-padded tail
         assert frame_count(got.shape[0], window, hop) == n_d
-    # no-frame signal
-    assert column_chunks(sig[:100], window, hop, D) == (None, 0, (0,) * D)
+    # no-frame signal: the named Deal still unpacks like the old 3-tuple
+    empty = column_chunks(sig[:100], window, hop, D)
+    assert empty.chunks is None and empty.n_frames == 0
+    assert empty.shares == (0,) * D
+    assert tuple(empty) == (None, 0, (0,) * D)
 
 
 def test_sharded_autotune_key_carries_device_count():
