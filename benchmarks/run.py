@@ -46,6 +46,16 @@ def main() -> None:
                     "1.25; the multi-device CI leg gates at 1.05 — "
                     "splitting the host thread pool across 8 fake devices "
                     "thins the margin without touching the property)")
+    ap.add_argument("--check-asr", action="store_true",
+                    help="fail unless the fused ASR feature front-end "
+                         "(*/asr_fused — ONE pallas_call, 'asr' stage "
+                         "graph with in-kernel framing) beats the staged "
+                         "4-launch reference (*/asr_staged) by >= the "
+                         "--asr-ratio threshold — the second-workload "
+                         "stage-graph gate (rows are timed paired)")
+    ap.add_argument("--asr-ratio", type=float, default=1.2,
+                    metavar="R", help="--check-asr threshold "
+                    "(default 1.2)")
     ap.add_argument("--check-hetero", action="store_true",
                     help="fail unless the telemetry-driven dynamic deal "
                          "(*/stream_hetero_dynamic) beats the static equal "
@@ -178,6 +188,22 @@ def main() -> None:
                 raise SystemExit(1)
             print(f"check-stream ok: {stream} {us:.1f}us, {framed} "
                   f"{uf:.1f}us ({uf / us:.2f}x)")
+    if args.check_asr:
+        by_name = {r["name"]: r["us_per_call"] for r in rows}
+        pairs = [(n, n.rsplit("asr_fused", 1)[0] + "asr_staged")
+                 for n in by_name if n.endswith("asr_fused")]
+        if not pairs:
+            print("check-asr: no asr_fused rows found", file=sys.stderr)
+            raise SystemExit(1)
+        for fused, staged in pairs:
+            uf, us = by_name[fused], by_name.get(staged)
+            if us is None or us < args.asr_ratio * uf:
+                print(f"check-asr FAILED: {fused}={uf:.1f}us vs "
+                      f"{staged}={us}us (need >= {args.asr_ratio}x)",
+                      file=sys.stderr)
+                raise SystemExit(1)
+            print(f"check-asr ok: {fused} {uf:.1f}us, {staged} "
+                  f"{us:.1f}us ({us / uf:.2f}x)")
     if args.check_hetero:
         by_name = {r["name"]: r["us_per_call"] for r in rows}
         pairs = [(n, n.rsplit("stream_hetero_dynamic", 1)[0] +

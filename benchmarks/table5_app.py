@@ -134,6 +134,47 @@ def _stream_rows():
     ]
 
 
+def _asr_rows():
+    """Streaming ASR feature front-end — the SECOND workload on the
+    stage-graph substrate: the fused ``"asr"`` graph (ONE `pallas_call`,
+    in-kernel (window, hop) framing, pre-emphasis FIR -> Hann -> packed
+    rFFT power -> log-mel matmul) vs the staged 4-launch reference
+    (`kernels/pipeline/asr.py:asr_staged`: host frame gather, FIR
+    kernel, jnp Hann, rFFT kernel, jnp mel/log — per-stage HBM round
+    trips). Numerically equal to f32 tolerance (`tests/test_asr.py`);
+    timed paired; the CI bench smoke gates fused >= 1.2x staged via
+    ``run.py --check-asr``."""
+    from repro.kernels.pipeline.asr import asr_staged, make_asr_frontend
+    from repro.kernels.pipeline.ops import graph_pipeline_stream
+
+    app = make_asr_frontend()
+    window, hop, n_frames = 512, 160, 64
+    rng = np.random.default_rng(9)
+    raw = rng.standard_normal(
+        (n_frames - 1) * hop + window).astype(np.float32)
+    t_fused, t_staged = _paired_times([
+        lambda: graph_pipeline_stream("asr", app, raw, window=window,
+                                      hop=hop, outputs=("logmel",),
+                                      block_frames=n_frames),
+        lambda: asr_staged(app, raw, window=window, hop=hop),
+    ], reps=25)
+    us_fused, us_staged = min(t_fused), min(t_staged)
+    from repro.core import autotune
+
+    autotune.record_pinned("table5/asr_fused", t_fused,
+                           baseline_us=t_staged)
+    return [
+        ("table5/asr_staged", us_staged,
+         f"4 launches/utterance (host frame gather; FIR kernel; Hann; "
+         f"rFFT kernel; mel/log) with per-stage HBM round trips "
+         f"(window={window},hop={hop},{n_frames} frames)"),
+        ("table5/asr_fused", us_fused,
+         f"ONE pallas_call/utterance, 'asr' stage graph with in-kernel "
+         f"framing, outputs=logmel;"
+         f"speedup_vs_staged={us_staged / us_fused:.2f}x"),
+    ]
+
+
 def _column_rows():
     """Column-scaling sweep for the STREAMING Pallas path — the mirror of
     `table2_fft._column_sweep` (which sweeps archsim's n_columns): a fixed
@@ -683,6 +724,7 @@ def run():
                  f"(paper 66.3%)"))
     rows += _pipeline_rows()
     rows += _stream_rows()
+    rows += _asr_rows()
     rows += _column_rows()
     rows += _hetero_rows()
     rows += _resident_rows()

@@ -37,6 +37,19 @@ are built in-kernel from a once-staged chunk — the streaming
 single-residency analogue of the paper's §4.2 overlap reuse. Both entries
 take an `outputs` selection that elides unrequested computation and HBM
 writes.
+
+**As of the stage-graph refactor** the three public entries
+(`pipeline_pallas`, `pipeline_stream_pallas`, `pipeline_ring_pallas`)
+keep their exact signatures but route through the generic graph compiler
+(`graph.py:graph_stream_pallas` and siblings): the biosignal app is the
+first registered `StageGraph` (stages ``fir -> delineate ->
+biosignal_features -> svm``, registered below), and the compiled body is
+**bit-identical** to the frozen legacy bodies this module retains
+(`pipeline_kernel`, `pipeline_stream_kernel`) because it composes the
+same helpers in the same op order — `tests/test_stage_graph.py` pins
+that equality across (window, hop, outputs, ring_depth). The ASR
+front-end (`asr.py`) is the second graph over the same machinery; see
+`docs/STAGE_GRAPHS.md` for authoring more.
 """
 from __future__ import annotations
 
@@ -50,21 +63,21 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.biosignal import (INTERVAL_SLOTS, band_power_features,
                                   delineate, interval_time_features,
-                                  oddeven_tables)
+                                  make_app, oddeven_tables)
 from repro.core.fft import untangle_rfft
-from repro.core.vwr import VWRSpec, resolve_block_rows
 from repro.kernels.fft.kernel import twiddle_table
-
-
-def _fir_stage(x, taps_ref, k: int):
-    """Causal k-tap FIR on the staged block — unrolled shifted FMAs, the
-    in-VMEM mirror of `core.fir.fir_direct`."""
-    rb, S = x.shape
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0)))
-    y = jnp.zeros_like(x)
-    for i in range(k):                   # unrolled taps == circular shifts
-        y = y + taps_ref[0, i] * xp[:, k - 1 - i: k - 1 - i + S]
-    return y
+from repro.kernels.pipeline.graph import (OutputSpec, _fir_stage,
+                                          build_graph, graph_frames_call,
+                                          graph_ring_call,
+                                          graph_stream_call,
+                                          register_graph_factory)
+# the framing arithmetic lives in graph.py now; re-exported here because
+# this module is its historical import location
+from repro.kernels.pipeline.graph import min_stream_block_frames  # noqa: F401
+from repro.kernels.pipeline.graph import resolve_stream_block_frames  # noqa: F401,E501
+from repro.kernels.pipeline.graph import ring_chunk_samples  # noqa: F401
+from repro.kernels.pipeline.graph import stream_frame_count  # noqa: F401
+from repro.kernels.pipeline.stages import register_stage
 
 
 def untangle_table(fft_size: int) -> np.ndarray:
@@ -76,15 +89,16 @@ def untangle_table(fft_size: int) -> np.ndarray:
     return np.stack([np.cos(ang), np.sin(ang)]).astype(np.float32)
 
 
-def _rfft_band_powers(seg, wr_ref, wi_ref, u_ref, *, fft_size: int):
-    """Packed real FFT (N real -> N/2 complex, Stockham stages, untangle)
-    reduced to the 6 log-band powers of `core.biosignal.extract_features`.
-
-    The butterfly stages are the FFT kernel's body verbatim, reading the
-    staged (stages, m/2) twiddle table and the (2, m) untangle table.
-    """
+def _packed_rfft(seg, wr_ref, wi_ref, u_ref, *, fft_size: int):
+    """Packed real FFT of a VMEM-resident (rb, fft_size) block: N real ->
+    N/2+1 complex via Stockham stages on the packed half-length signal +
+    the untangle epilogue. The butterfly stages are the FFT kernel's body
+    verbatim, reading the staged (stages, m/2) twiddle table and the
+    (2, m) untangle table. Returns ``(Xr, Xi)``, each (rb, fft/2+1).
+    Shared by the biosignal band-power stage (mean-subtracted input) and
+    the ASR power-spectrum stage (raw windowed input) — the in-kernel
+    mirror of `core.fft.rfft_packed`."""
     rb = seg.shape[0]
-    seg = seg - jnp.mean(seg, axis=-1, keepdims=True)
     zr, zi = seg[:, 0::2], seg[:, 1::2]            # pack: z = even + i*odd
     m = fft_size // 2
     stages = int(np.log2(m))
@@ -108,7 +122,14 @@ def _rfft_band_powers(seg, wr_ref, wi_ref, u_ref, *, fft_size: int):
         g, n = 2 * g, n // 2
     Zr = re.reshape(rb, m)
     Zi = im.reshape(rb, m)
-    Xr, Xi = untangle_rfft(Zr, Zi, u_ref[0, :], u_ref[1, :])
+    return untangle_rfft(Zr, Zi, u_ref[0, :], u_ref[1, :])
+
+
+def _rfft_band_powers(seg, wr_ref, wi_ref, u_ref, *, fft_size: int):
+    """Mean-subtracted `_packed_rfft` power reduced to the 6 log-band
+    powers of `core.biosignal.extract_features`."""
+    seg = seg - jnp.mean(seg, axis=-1, keepdims=True)
+    Xr, Xi = _packed_rfft(seg, wr_ref, wi_ref, u_ref, fft_size=fft_size)
     power = jnp.square(Xr) + jnp.square(Xi)        # (rb, fft/2+1)
     return band_power_features(power, fft_size)
 
@@ -233,6 +254,88 @@ def _as_output_dict(outs: tuple, outputs: tuple, n: int) -> dict:
     return res
 
 
+# ---------------------------------------------------------------------------
+# The biosignal app as a registered stage graph
+# ---------------------------------------------------------------------------
+
+@register_stage("delineate", requires=("filtered",),
+                produces=("is_max", "is_min"))
+def _delineate_body(state, tables, params):
+    """Delineation mask algebra (`core.biosignal.delineate`, the paper's
+    predicated RC code) on the VMEM-resident filtered block."""
+    is_max, is_min = delineate(state["filtered"])
+    return {"is_max": is_max, "is_min": is_min}
+
+
+@register_stage("biosignal_features",
+                operands=("twiddle_re", "twiddle_im", "untangle",
+                          "sort_lo", "sort_hi", "sort_ks"),
+                requires=("filtered", "is_max", "is_min"),
+                produces=("features",))
+def _features_body(state, tables, params):
+    """Masked interval time features (odd-even network median off the
+    staged sort masks) + packed-rFFT band powers, stacked to (rb, 12)."""
+    f_time = interval_time_features(
+        state["is_max"], state["is_min"],
+        sort_tables=(tables["sort_lo"][...], tables["sort_hi"][...],
+                     tables["sort_ks"][...]))
+    f_freq = _rfft_band_powers(
+        state["filtered"][:, :params["fft_size"]], tables["twiddle_re"],
+        tables["twiddle_im"], tables["untangle"],
+        fft_size=params["fft_size"])
+    return {"features": jnp.stack(f_time + f_freq, axis=-1)}
+
+
+@register_stage("svm", operands=("svm_w", "svm_b"), requires=("features",),
+                produces=("margin", "class"))
+def _svm_body(state, tables, params):
+    """Linear SVM margin + argmax class — the matmul epilogue stage."""
+    margin = jnp.dot(state["features"], tables["svm_w"][...],
+                     preferred_element_type=jnp.float32
+                     ) + tables["svm_b"][0]
+    return {"margin": margin,
+            "class": jnp.argmax(margin, axis=-1).astype(jnp.int32)}
+
+
+@functools.lru_cache(maxsize=None)
+def biosignal_graph(n_taps: int, n_features: int, n_classes: int,
+                    fft_size: int):
+    """The biosignal app as a `StageGraph` — the first registered graph.
+    Cached per static signature so the graph object is identical across
+    calls (it is a static jit argument of the generic entries)."""
+    return build_graph(
+        "biosignal",
+        ("fir", "delineate", "biosignal_features", "svm"),
+        (("filtered", OutputSpec(("window",), "input")),
+         ("features", OutputSpec(("n_features",), "float32")),
+         ("margin", OutputSpec(("n_classes",), "float32")),
+         ("class", OutputSpec((), "int32"))),
+        # binding order == the `_table_operands` tuple order
+        ("fir_taps", "twiddle_re", "twiddle_im", "untangle",
+         "svm_w", "svm_b", "sort_lo", "sort_hi", "sort_ks"),
+        (("n_taps", int(n_taps)), ("fft_size", int(fft_size)),
+         ("n_features", int(n_features)), ("n_classes", int(n_classes))))
+
+
+def _biosignal_graph_operands(taps, w, b, fft_size: int):
+    """(graph, operand arrays) for the legacy (taps, w, b) signature."""
+    operands, _ = _table_operands(taps, w, b, fft_size)
+    F, C = w.shape
+    return (biosignal_graph(int(taps.shape[0]), int(F), int(C),
+                            int(fft_size)), operands)
+
+
+def _biosignal_factory(app):
+    """Graph factory (`graph.py:register_graph_factory`): bind a
+    `core.biosignal.BiosignalApp`'s taps/weights to the graph operands."""
+    return _biosignal_graph_operands(app.fir_taps, app.svm_w, app.svm_b,
+                                     app.fft_size)
+
+
+register_graph_factory("biosignal", _biosignal_factory,
+                       default_app=make_app)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("fft_size", "interpret", "block_rows",
                                     "outputs"))
@@ -244,57 +347,24 @@ def pipeline_pallas(signal, taps, w, b, *, fft_size: int = 512,
     Returns the staged `BiosignalApp.__call__` dict restricted to
     `outputs` (default all four): {"filtered": (R,S), "features": (R,F),
     "margin": (R,C), "class": (R,)}. Exactly ONE `pallas_call` runs per
-    window batch; unrequested outputs are never written to HBM.
+    window batch; unrequested outputs are never written to HBM. Compiles
+    the biosignal `StageGraph` via `graph.py:graph_frames_call` —
+    bit-identical to the frozen legacy `pipeline_kernel` body.
     """
     outputs = canonical_outputs(outputs)
-    R, S = signal.shape
-    k = int(taps.shape[0])
-    F, C = w.shape
-    assert S >= fft_size, (S, fft_size)
-    # raw + filtered + two FFT planes ~= 4 live VWR blocks
-    rb = resolve_block_rows(R, S * 4, spec=VWRSpec(n_vwrs=4),
-                            override=block_rows)
-    tables, table_specs = _table_operands(taps, w, b, fft_size)
-    out_shape, out_specs = _out_shapes_specs(R, S, F, C, rb, signal.dtype,
-                                             outputs)
-    outs = pl.pallas_call(
-        functools.partial(pipeline_kernel, n_taps=k, fft_size=fft_size,
-                          outputs=outputs),
-        out_shape=out_shape,
-        in_specs=[pl.BlockSpec((rb, S), lambda i: (i, 0),
-                               memory_space=pltpu.VMEM)] + table_specs,
-        out_specs=out_specs,
-        grid=(R // rb,),
-        interpret=interpret,
-    )(signal, *tables)
-    return _as_output_dict(outs, outputs, R)
+    graph, operands = _biosignal_graph_operands(taps, w, b, fft_size)
+    return graph_frames_call(signal, operands, graph=graph,
+                             interpret=interpret, block_rows=block_rows,
+                             outputs=outputs)
 
 
 # ---------------------------------------------------------------------------
 # Raw-signal streaming kernel: in-kernel framing, single residency
 # ---------------------------------------------------------------------------
 
-def stream_frame_count(n_samples: int, window: int, hop: int) -> int:
-    return 0 if n_samples < window else 1 + (n_samples - window) // hop
-
-
-def min_stream_block_frames(window: int, hop: int) -> int:
-    """Smallest legal frame-block: the tail chunk supplies the
-    (window - hop) overlap spill, so the body chunk (block_frames * hop
-    samples) must be at least that long."""
-    return 1 if window <= hop else -(-(window - hop) // hop)
-
-
-def resolve_stream_block_frames(n_frames: int, window: int, hop: int,
-                                override: int | None = None) -> int:
-    """Frames staged per grid step. Unlike the framed kernel the block
-    need not divide (or even stay below) the frame count — the signal is
-    zero-padded and the garbage tail frames are trimmed after the call.
-    Never below `min_stream_block_frames`: the tail chunk holds only
-    block_frames*hop samples, which must cover the window-hop spill."""
-    rb = override or min(max(n_frames, 1), 8)
-    return max(1, rb, min_stream_block_frames(window, hop))
-
+# stream_frame_count / min_stream_block_frames / resolve_stream_block_frames
+# moved to graph.py (re-exported above): they are graph-generic framing
+# arithmetic, not biosignal specifics.
 
 def empty_outputs(window: int, F: int, C: int, dtype, outputs=None) -> dict:
     """The zero-frame result, with the SAME keys/shapes/dtypes as a
@@ -368,61 +438,23 @@ def pipeline_stream_pallas(signal, taps, w, b, *, window: int, hop: int,
     frames are built inside the kernel, so HBM traffic is ~n_samples
     instead of n_frames*window (§4.2/§4.4.2 single residency). Returns the
     framed `pipeline_pallas` dict over the signal's n_frames frames,
-    restricted to `outputs`. Exactly ONE `pallas_call` per call.
+    restricted to `outputs`. Exactly ONE `pallas_call` per call. Compiles
+    the biosignal `StageGraph` via `graph.py:graph_stream_call` — the
+    in-kernel framing schedule is documented on the frozen legacy body
+    `pipeline_stream_kernel` and pinned bit-identical against it.
     """
     outputs = canonical_outputs(outputs)
-    (S,) = signal.shape
-    k = int(taps.shape[0])
-    F, C = w.shape
-    assert window >= fft_size, (window, fft_size)
-    assert 0 < hop <= window, (hop, window)
-    n = stream_frame_count(S, window, hop)
-    if n == 0:
-        return empty_outputs(window, F, C, signal.dtype, outputs)
-    rb = resolve_stream_block_frames(n, window, hop, block_frames)
-    n_blocks = -(-n // rb)
-    L = rb * hop                     # body chunk: one block's sample stride
-    n_tails = min_stream_block_frames(window, hop) if window > hop else 0
-    # hop-granular padding: every spec must tile the padded signal, so pad
-    # the hop count up to a multiple of rb (zeros; garbage frames trimmed)
-    total = -(-(n_blocks * rb + n_tails) // rb) * L
-    sig = signal[:min(S, total)]
-    if total > sig.shape[0]:
-        sig = jnp.concatenate(
-            [sig, jnp.zeros((total - sig.shape[0],), sig.dtype)])
-    sig2 = sig.reshape(1, total)
-    in_specs = [pl.BlockSpec((1, L), lambda j: (0, j),
-                             memory_space=pltpu.VMEM)]
-    for i in range(n_tails):         # the SAME signal, i hop-blocks ahead
-        in_specs.append(pl.BlockSpec(
-            (1, hop), lambda j, i=i: (0, j * rb + rb + i),
-            memory_space=pltpu.VMEM))
-    tables, table_specs = _table_operands(taps, w, b, fft_size)
-    out_shape, out_specs = _out_shapes_specs(n_blocks * rb, window, F, C,
-                                             rb, signal.dtype, outputs)
-    outs = pl.pallas_call(
-        functools.partial(pipeline_stream_kernel, n_taps=k,
-                          fft_size=fft_size, window=window, hop=hop,
-                          block_frames=rb, outputs=outputs,
-                          n_tails=n_tails),
-        out_shape=out_shape,
-        in_specs=in_specs + table_specs,
-        out_specs=out_specs,
-        grid=(n_blocks,),
-        interpret=interpret,
-    )(*((sig2,) * (1 + n_tails)), *tables)
-    return _as_output_dict(outs, outputs, n)
+    graph, operands = _biosignal_graph_operands(taps, w, b, fft_size)
+    return graph_stream_call(signal, operands, graph=graph, window=window,
+                             hop=hop, interpret=interpret,
+                             block_frames=block_frames, outputs=outputs)
 
 
 # ---------------------------------------------------------------------------
 # Ring-chunk kernel: one pallas_call over a ring of raw-signal chunks
 # ---------------------------------------------------------------------------
 
-def ring_chunk_samples(window: int, hop: int, batch_windows: int) -> int:
-    """Samples per ring slot: one `batch_windows`-frame dispatch's span —
-    the same arithmetic as `serve.stream.BiosignalStream.chunk_samples`."""
-    return (batch_windows - 1) * hop + window
-
+# ring_chunk_samples moved to graph.py (re-exported above).
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "hop", "fft_size", "interpret",
@@ -450,51 +482,11 @@ def pipeline_ring_pallas(ring, taps, w, b, *, window: int, hop: int,
     Returns the `pipeline_stream_pallas` output dict per slot, stacked:
     each value has leading shape `(ring_depth, frames_per_slot)` and row r
     is bit-identical to `pipeline_stream_pallas(ring[r], ...)` — the
-    property `tests/test_resident.py` pins.
+    property `tests/test_resident.py` pins. Compiles the biosignal
+    `StageGraph` via `graph.py:graph_ring_call`.
     """
     outputs = canonical_outputs(outputs)
-    D, span = ring.shape
-    k = int(taps.shape[0])
-    F, C = w.shape
-    assert window >= fft_size, (window, fft_size)
-    assert 0 < hop <= window, (hop, window)
-    n = stream_frame_count(span, window, hop)      # frames per ring slot
-    assert n > 0, f"ring span {span} shorter than one {window}-window"
-    rb = resolve_stream_block_frames(n, window, hop, block_frames)
-    n_blocks = -(-n // rb)
-    L = rb * hop                     # body chunk: one block's sample stride
-    n_tails = min_stream_block_frames(window, hop) if window > hop else 0
-    # pad every slot row to the block tiling (same hop-granular arithmetic
-    # as the single-chunk entry; the pad frames are trimmed per slot)
-    total = -(-(n_blocks * rb + n_tails) // rb) * L
-    if total > span:
-        ring = jnp.concatenate(
-            [ring, jnp.zeros((D, total - span), ring.dtype)], axis=1)
-    else:
-        ring = ring[:, :total]
-    in_specs = [pl.BlockSpec((1, L), lambda r, j: (r, j),
-                             memory_space=pltpu.VMEM)]
-    for i in range(n_tails):         # the SAME slot row, i hop-blocks ahead
-        in_specs.append(pl.BlockSpec(
-            (1, hop), lambda r, j, i=i: (r, j * rb + rb + i),
-            memory_space=pltpu.VMEM))
-    tables, table_specs = _table_operands(taps, w, b, fft_size)
-    out_shape, out_specs = _out_shapes_specs(
-        D * n_blocks * rb, window, F, C, rb, ring.dtype, outputs,
-        index_map=lambda r, j: (r * n_blocks + j, 0))
-    outs = pl.pallas_call(
-        functools.partial(pipeline_stream_kernel, n_taps=k,
-                          fft_size=fft_size, window=window, hop=hop,
-                          block_frames=rb, outputs=outputs,
-                          n_tails=n_tails),
-        out_shape=out_shape,
-        in_specs=in_specs + table_specs,
-        out_specs=out_specs,
-        grid=(D, n_blocks),
-        interpret=interpret,
-    )(*((ring,) * (1 + n_tails)), *tables)
-    res = _as_output_dict(outs, outputs, D * n_blocks * rb)
-    # per-slot trim: every slot framed n_blocks*rb rows, keep its n real
-    # frames and restore the (ring_depth, n, ...) slot structure
-    return {key: v.reshape((D, n_blocks * rb) + v.shape[1:])[:, :n]
-            for key, v in res.items()}
+    graph, operands = _biosignal_graph_operands(taps, w, b, fft_size)
+    return graph_ring_call(ring, operands, graph=graph, window=window,
+                           hop=hop, interpret=interpret,
+                           block_frames=block_frames, outputs=outputs)

@@ -1,4 +1,4 @@
-"""Public API for the fused biosignal pipeline kernel.
+"""Public API for the fused stage-graph pipeline kernels.
 
 Two entry points share the in-VMEM stage chain:
 
@@ -8,6 +8,13 @@ Two entry points share the in-VMEM stage chain:
   (window, hop) frames are built inside the kernel from a once-staged
   signal chunk, so HBM traffic is ~n_samples instead of n_frames*window
   and the host never gathers frames.
+
+The ``graph_pipeline*`` trio is the GENERIC face of the same machinery:
+any registered stage graph (`graph.py:register_graph_factory` —
+``"biosignal"``, ``"asr"``, or one you author per
+`docs/STAGE_GRAPHS.md`) resolved by name, same framed/stream/ring
+entries, autotune keys carrying the graph name so winners never leak
+across graphs.
 """
 from __future__ import annotations
 
@@ -15,6 +22,9 @@ import functools
 
 import jax
 
+from repro.kernels.pipeline.graph import (default_app, get_graph_factory,
+                                          graph_pallas, graph_ring_pallas,
+                                          graph_stream_pallas)
 from repro.kernels.pipeline.kernel import (OUTPUTS, canonical_outputs,
                                            pipeline_pallas,
                                            pipeline_ring_pallas,
@@ -27,7 +37,8 @@ from repro.kernels.pipeline.shard import (column_shares, pipeline_sharded,
 __all__ = ["OUTPUTS", "canonical_outputs", "biosignal_pipeline",
            "biosignal_pipeline_stream", "biosignal_pipeline_ring",
            "app_pipeline", "app_pipeline_stream", "app_pipeline_ring",
-           "ring_chunk_samples"]
+           "graph_pipeline", "graph_pipeline_stream", "graph_pipeline_ring",
+           "ring_chunk_samples", "default_app"]
 
 
 def _interpret() -> bool:
@@ -137,6 +148,75 @@ def biosignal_pipeline_ring(ring, taps, w, b, *, window: int, hop: int,
     return pipeline_ring_pallas(ring, taps, w, b, window=window, hop=hop,
                                 fft_size=fft_size, interpret=_interpret(),
                                 block_frames=block_frames, outputs=outputs)
+
+
+def graph_pipeline(name: str, app, frames, *,
+                   block_rows: int | None = None, autotune: bool = False,
+                   outputs=None):
+    """Run a REGISTERED stage graph on pre-framed (R, S) windows in ONE
+    fused Pallas call. ``name`` resolves via
+    `graph.py:get_graph_factory`; ``app`` binds the graph's operand
+    tables (``None`` uses the graph's registered default app). Returns
+    the graph's output dict restricted to ``outputs``."""
+    factory = get_graph_factory(name)
+    graph, operands = factory(app if app is not None
+                              else default_app(name))
+    interpret = _interpret()
+    if autotune and block_rows is None:
+        from repro.core.autotune import tuned_block_rows
+
+        R, S = frames.shape
+        block_rows = tuned_block_rows(
+            f"{graph.name}_pipeline", R,
+            (S, graph.params, outputs, str(frames.dtype)),
+            lambda rb: graph_pallas(frames, operands, graph=graph,
+                                    interpret=interpret, block_rows=rb,
+                                    outputs=outputs))
+    return graph_pallas(frames, operands, graph=graph, interpret=interpret,
+                        block_rows=block_rows, outputs=outputs)
+
+
+def graph_pipeline_stream(name: str, app, signal, *, window: int, hop: int,
+                          block_frames: int | None = None,
+                          autotune: bool = False, outputs=None):
+    """Run a registered stage graph over a RAW 1-D signal with in-kernel
+    (window, hop) framing — `graph.py:graph_stream_pallas` under an
+    autotuned frame-block. The cache key is
+    ``f"{name}_pipeline_stream"``, so the biosignal graph keeps its
+    historical ``"biosignal_pipeline_stream"`` winners and other graphs
+    tune independently."""
+    factory = get_graph_factory(name)
+    graph, operands = factory(app if app is not None
+                              else default_app(name))
+    interpret = _interpret()
+    if autotune and block_frames is None:
+        from repro.core.autotune import tuned_stream_block_frames
+
+        n = stream_frame_count(signal.shape[0], window, hop)
+        if n > 1:
+            block_frames = tuned_stream_block_frames(
+                f"{graph.name}_pipeline_stream", n, window, hop, outputs,
+                str(signal.dtype),
+                lambda rb: graph_stream_pallas(
+                    signal, operands, graph=graph, window=window, hop=hop,
+                    interpret=interpret, block_frames=rb, outputs=outputs))
+    return graph_stream_pallas(signal, operands, graph=graph, window=window,
+                               hop=hop, interpret=interpret,
+                               block_frames=block_frames, outputs=outputs)
+
+
+def graph_pipeline_ring(name: str, app, ring, *, window: int, hop: int,
+                        block_frames: int | None = None, outputs=None):
+    """Run a registered stage graph over a `(ring_depth, span)` ring of
+    raw chunks in one fused call — the graph-generic
+    `biosignal_pipeline_ring`, dispatched by the device-resident loop
+    (`serve/resident.py`) for any graph."""
+    factory = get_graph_factory(name)
+    graph, operands = factory(app if app is not None
+                              else default_app(name))
+    return graph_ring_pallas(ring, operands, graph=graph, window=window,
+                             hop=hop, interpret=_interpret(),
+                             block_frames=block_frames, outputs=outputs)
 
 
 def app_pipeline(app, signal, *, block_rows: int | None = None,

@@ -11,6 +11,12 @@ Two baselines, matching the paper's Table 5 columns:
   calls (the seed `BiosignalApp` decomposition); informational.
 
 For numerical tests the oracle is `core.biosignal.BiosignalApp` itself.
+
+The ASR front-end has the same pair of baselines in its own module:
+`asr.py:asr_staged` is this file's kernel-at-a-time sibling (host frame
+gather + FIR kernel + jnp Hann + rFFT kernel + jnp mel/log — the
+``--check-asr`` gate's baseline), and `asr.py:asr_reference` is its
+numpy oracle.
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
-"""One admission front-end for BOTH traffic classes the repo serves.
+"""One admission front-end for EVERY traffic class the repo serves.
 
-Before this module the two classes had two unrelated front doors:
+Before this module the classes had unrelated front doors:
 LM requests went through `Engine.submit` /
 `FaultTolerantEngine.submit`, biosignal streams through
 `ColumnScheduler.open_stream` — three verbs, two queues, no shared
@@ -10,20 +10,33 @@ policy. `ServeFrontend` replaces all three with ONE verb:
     t_lm = front.submit(Request(0, [3, 1, 4], max_new=8))
     t_bio = front.submit(StreamOpen(stream_id="sensor-7", app=app,
                                     cfg=cfg))
+    t_asr = front.submit(AsrTranscribe(1, audio))
     front.run()
     tokens = t_lm.result().out       # the finished Request
     stream = t_bio.result()          # the placed BiosignalStream
+    asr = t_asr.result()             # AsrResult: fused log-mel + tokens
 
 Every submission returns a typed `Ticket` (id, class, status, result
 accessor); the old entry points remain as `DeprecationWarning` shims for
 one release (`Engine.submit`, `ColumnScheduler.open_stream`).
 
-ADMISSION POLICY — one queue, per-class QoS weights. Work of both
+THE ASR CLASS — `AsrTranscribe` is speech work that spans BOTH halves
+of the runtime: at dispatch the raw waveform runs through the fused
+stage-graph feature front-end (`kernels/pipeline/asr.py:asr_graph` via
+`kernels/pipeline/ops.py:graph_pipeline_stream` — one `pallas_call`,
+in-kernel framing), then a decoder `Request` is admitted to the
+enc-dec LM engine (the `whisper_medium` reduced config path); the
+ticket resolves to an `AsrResult` pairing the log-mel features with
+the finished request. It shares the LM engine's backpressure
+(`QueueFull` leaves it queued) and its QoS weight is independent.
+
+ADMISSION POLICY — one queue, per-class QoS weights. Work of all
 classes waits in a single arrival-ordered queue; `pump` drains it by
 WEIGHTED ROUND-ROBIN over the classes (default ``{"lm": 1,
-"stream": 1}``), so a burst of one class cannot starve the other —
-a class with weight w dispatches at most w items per cycle while the
-other class has work waiting. Downstream backpressure is respected,
+"stream": 1, "asr": 1}``), so a burst of one class cannot starve the
+others — a class with weight w dispatches at most w items per cycle
+while another class has work waiting. Downstream backpressure is
+respected,
 not retried: a `QueueFull` from the fault-tolerant engine leaves the
 ticket QUEUED for the next pump; a typed rejection (`PromptTooLong`,
 `InsufficientPages`, `RequestExpired`, `InsufficientHealthyWorkers`)
@@ -49,7 +62,8 @@ from repro.serve.engine import Request
 from repro.serve.errors import (QueueFull, RequestExpired, ServeError,
                                 TicketNotReady)
 
-__all__ = ["StreamOpen", "Ticket", "ServeFrontend"]
+__all__ = ["StreamOpen", "AsrTranscribe", "AsrResult", "Ticket",
+           "ServeFrontend"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +74,41 @@ class StreamOpen:
     stream_id: object
     app: object = None
     cfg: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AsrTranscribe:
+    """The asr-class work item: one utterance end to end.
+
+    ``audio`` is the raw 1-D waveform; at dispatch it is featurized by
+    the fused ``"asr"`` stage graph (pre-emphasis FIR -> Hann -> packed
+    rFFT power -> log-mel, ONE `pallas_call` with in-kernel
+    (window, hop) framing) and a decoder `Request` — ``prompt`` tokens
+    (default ``[0]``, the start-of-transcript placeholder), ``max_new``
+    budget — is admitted to the enc-dec engine under the same rid.
+    ``app`` is an `asr.py:AsrFrontendApp` (None = registered default:
+    16 kHz, 512-point FFT, 64 mels)."""
+    rid: int
+    audio: object
+    window: int = 512
+    hop: int = 160
+    app: object = None
+    max_new: int = 16
+    prompt: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AsrResult:
+    """What an asr-class `Ticket.result` returns: the fused log-mel
+    features (n_frames, n_mels) computed at dispatch, paired with the
+    finished engine `Request` (decoded ids in ``request.out``)."""
+    rid: int
+    features: object
+    request: object
+
+    @property
+    def tokens(self) -> list:
+        return self.request.out
 
 
 @dataclasses.dataclass
@@ -73,7 +122,7 @@ class Ticket:
     `BiosignalStream` for stream work; it re-raises the stored error
     for failed tickets and raises `TicketNotReady` before completion."""
     tid: int
-    work_class: str                 # "lm" | "stream"
+    work_class: str                 # "lm" | "stream" | "asr"
     status: str = "queued"
     _result: object = None
     _error: Optional[BaseException] = None
@@ -104,21 +153,23 @@ class ServeFrontend:
                  qos: Optional[dict] = None):
         self.engine = engine
         self.scheduler = scheduler
-        self.qos = dict(qos) if qos is not None else {"lm": 1, "stream": 1}
+        self.qos = dict(qos) if qos is not None else \
+            {"lm": 1, "stream": 1, "asr": 1}
         assert all(w >= 1 for w in self.qos.values()), self.qos
         self.tickets: list[Ticket] = []
         self._pending: list[tuple] = []   # (ticket, work, kwargs)
-        self._by_rid: dict = {}           # live LM rid -> ticket
+        self._by_rid: dict = {}           # live LM/ASR rid -> ticket
+        self._features: dict = {}         # live ASR rid -> log-mel array
         self.lent: list[tuple] = []       # (column, device) on loan to LM
 
     # ---------------------------------------------------------- admission
 
     def submit(self, work, **kwargs) -> Ticket:
-        """THE admission verb for both classes: an LM `Request` or a
-        `StreamOpen`. Returns the `Ticket` immediately; dispatch happens
-        on the next `pump` (so QoS weighting sees the whole arrival
-        batch, and downstream backpressure never raises out of
-        submit)."""
+        """THE admission verb for every class: an LM `Request`, a
+        `StreamOpen`, or an `AsrTranscribe`. Returns the `Ticket`
+        immediately; dispatch happens on the next `pump` (so QoS
+        weighting sees the whole arrival batch, and downstream
+        backpressure never raises out of submit)."""
         if isinstance(work, Request):
             cls = "lm"
             if self.engine is None:
@@ -127,10 +178,14 @@ class ServeFrontend:
             cls = "stream"
             if self.scheduler is None:
                 raise ValueError("no scheduler configured for stream work")
+        elif isinstance(work, AsrTranscribe):
+            cls = "asr"
+            if self.engine is None:
+                raise ValueError("no engine configured for ASR work")
         else:
             raise TypeError(
-                f"submit() takes a Request or a StreamOpen, got "
-                f"{type(work).__name__}")
+                f"submit() takes a Request, a StreamOpen, or an "
+                f"AsrTranscribe, got {type(work).__name__}")
         t = Ticket(len(self.tickets), cls)
         self.tickets.append(t)
         self._pending.append((t, work, kwargs))
@@ -141,10 +196,31 @@ class ServeFrontend:
             self.engine.add_request(work, **kwargs)
             self._by_rid[work.rid] = ticket
             ticket.status = "running"
+        elif ticket.work_class == "asr":
+            self._dispatch_asr(ticket, work, kwargs)
         else:
             stream = self.scheduler.place_stream(
                 work.app, work.cfg, stream_id=work.stream_id, **kwargs)
             ticket._finish(stream)
+
+    def _dispatch_asr(self, ticket: Ticket, work: AsrTranscribe,
+                      kwargs) -> None:
+        """Featurize on the fused stage-graph path, then admit the
+        decoder request. Features are computed BEFORE `add_request` so
+        engine backpressure (`QueueFull`) re-dispatches cheaply: the
+        stash under the rid survives and is reused on the retry."""
+        if work.rid not in self._features:
+            from repro.kernels.pipeline.ops import graph_pipeline_stream
+
+            feats = graph_pipeline_stream(
+                "asr", work.app, work.audio, window=work.window,
+                hop=work.hop, outputs=("logmel",))["logmel"]
+            self._features[work.rid] = feats
+        prompt = list(work.prompt) if work.prompt is not None else [0]
+        self.engine.add_request(Request(work.rid, prompt,
+                                        max_new=work.max_new), **kwargs)
+        self._by_rid[work.rid] = ticket
+        ticket.status = "running"
 
     def pump(self) -> int:
         """Drain the unified queue by weighted round-robin over the
@@ -172,6 +248,8 @@ class ServeFrontend:
                         break
                     except ServeError as e:
                         item[0]._fail(e)
+                        self._features.pop(getattr(item[1], "rid", None),
+                                           None)
                     self._pending.remove(item)
                     dispatched += 1
                     progress = True
@@ -182,12 +260,18 @@ class ServeFrontend:
     def _resolve_engine(self, done) -> None:
         for req in done:
             t = self._by_rid.pop(req.rid, None)
-            if t is not None:
+            if t is None:
+                continue
+            if t.work_class == "asr":
+                t._finish(AsrResult(req.rid,
+                                    self._features.pop(req.rid, None), req))
+            else:
                 t._finish(req)
         # TTL-shed requests surface as failed tickets, not silent loss
         for req in getattr(self.engine, "expired", ()):
             t = self._by_rid.pop(req.rid, None)
             if t is not None:
+                self._features.pop(req.rid, None)
                 t._fail(RequestExpired(req.rid, 0.0))
 
     def run(self, max_steps: int = 1000) -> list[Ticket]:

@@ -50,10 +50,13 @@ import numpy as np
 from jax import lax
 
 from repro.core.biosignal import BiosignalApp, make_app
-from repro.kernels.pipeline.kernel import (empty_outputs,
-                                           pipeline_ring_pallas,
-                                           ring_chunk_samples)
-from repro.kernels.pipeline.ops import canonical_outputs, stream_frame_count
+from repro.kernels.pipeline.graph import (canonical_graph_outputs,
+                                          get_graph_factory,
+                                          graph_empty_outputs,
+                                          graph_ring_pallas,
+                                          ring_chunk_samples)
+from repro.kernels.pipeline.ops import (OUTPUTS, canonical_outputs,
+                                        default_app, stream_frame_count)
 from repro.serve.stream import StreamConfig, StreamTelemetry
 
 DEFAULT_RING_DEPTH = 4
@@ -89,12 +92,12 @@ def _interpret() -> bool:
 
 @functools.partial(
     jax.jit, donate_argnums=(0, 1),
-    static_argnames=("window", "hop", "batch_windows", "ring_depth",
-                     "n_sweeps", "fft_size", "interpret", "block_frames",
+    static_argnames=("graph", "window", "hop", "batch_windows",
+                     "ring_depth", "n_sweeps", "interpret", "block_frames",
                      "outputs"))
-def _resident_loop(sig, counter, taps, w, b, n_frames, *, window: int,
+def _resident_loop(sig, counter, operands, n_frames, *, graph, window: int,
                    hop: int, batch_windows: int, ring_depth: int,
-                   n_sweeps: int, fft_size: int, interpret: bool,
+                   n_sweeps: int, interpret: bool,
                    block_frames: int | None, outputs: tuple):
     """ONE compiled computation for the whole steady state: `lax.scan`
     over ring sweeps of the donated signal buffer.
@@ -107,7 +110,10 @@ def _resident_loop(sig, counter, taps, w, b, n_frames, *, window: int,
     per-frame output dict, the final counter, and the per-sweep counter
     snapshots the host drains at `drain_interval` granularity.
 
-    ``sig`` and ``counter`` are donated: the loop owns the ring memory.
+    ``graph`` is the STATIC `kernels.pipeline.graph.StageGraph` to run
+    (the loop is graph-generic: biosignal and ASR resident streams share
+    this one jit) and ``operands`` its staged table arrays. ``sig`` and
+    ``counter`` are donated: the loop owns the ring memory.
     """
     span = ring_chunk_samples(window, hop, batch_windows)
     stride = batch_windows * hop
@@ -118,10 +124,10 @@ def _resident_loop(sig, counter, taps, w, b, n_frames, *, window: int,
         ring = jnp.stack([
             lax.dynamic_slice(sig, (base + r * stride,), (span,))
             for r in range(ring_depth)])
-        out = pipeline_ring_pallas(ring, taps, w, b, window=window, hop=hop,
-                                   fft_size=fft_size, interpret=interpret,
-                                   block_frames=block_frames,
-                                   outputs=outputs)
+        out = graph_ring_pallas(ring, operands, graph=graph, window=window,
+                                hop=hop, interpret=interpret,
+                                block_frames=block_frames,
+                                outputs=outputs)
         # frames retired this sweep = valid frames newly covered (the tail
         # sweep's pad frames are excluded by the same min() the host
         # path's per-batch `valid` uses)
@@ -167,10 +173,21 @@ class ResidentStream:
                  telemetry: StreamTelemetry | None = None,
                  stream_id=None, column: int = 0,
                  injector=None, retry=None):
-        self.app = app or make_app()
         cfg = cfg or StreamConfig()
-        self.cfg = dataclasses.replace(
-            cfg, outputs=canonical_outputs(cfg.outputs))
+        if cfg.graph == "biosignal":
+            self.app = app or make_app()
+            cfg = dataclasses.replace(
+                cfg, outputs=canonical_outputs(cfg.outputs))
+        else:
+            self.app = app if app is not None else default_app(cfg.graph)
+            graph, _ = get_graph_factory(cfg.graph)(self.app)
+            sel = None if cfg.outputs is OUTPUTS else cfg.outputs
+            cfg = dataclasses.replace(
+                cfg, outputs=canonical_graph_outputs(graph, sel))
+        # the loop is graph-generic: resolve (graph, operands) once here
+        self._graph, self._operands = \
+            get_graph_factory(cfg.graph)(self.app)
+        self.cfg = cfg
         self.rcfg = rcfg or ResidentConfig()
         assert self.cfg.framing == "kernel", \
             "the resident loop is a raw-chunk (framing='kernel') path"
@@ -218,8 +235,12 @@ class ResidentStream:
             from repro.core.autotune import tuned_ring_depth
 
             cfg = self.cfg
+            # the biosignal graph keeps its historical cache name; other
+            # graphs tune under their own key so winners never leak
+            name = "resident_ring" if cfg.graph == "biosignal" \
+                else f"{cfg.graph}_resident_ring"
             return tuned_ring_depth(
-                "resident_ring", cfg.window, cfg.hop, cfg.batch_windows,
+                name, cfg.window, cfg.hop, cfg.batch_windows,
                 cfg.outputs, "float32", self.rcfg.drain_interval, n_batches,
                 lambda rd: self._run(
                     jnp.zeros((self.chunk_samples +
@@ -244,7 +265,6 @@ class ResidentStream:
         if self.device is not None:
             sig = jax.device_put(sig, self.device)
             counter = jax.device_put(counter, self.device)
-        app = self.app
 
         def dispatch():
             # the injector fires BEFORE the loop consumes its donated
@@ -259,12 +279,13 @@ class ResidentStream:
                     "ignore",
                     message="Some donated buffers were not usable")
                 return _resident_loop(
-                    sig, counter, app.fir_taps, app.svm_w, app.svm_b,
-                    jnp.asarray(n, jnp.int32), window=cfg.window,
-                    hop=cfg.hop, batch_windows=cfg.batch_windows,
+                    sig, counter, self._operands,
+                    jnp.asarray(n, jnp.int32), graph=self._graph,
+                    window=cfg.window, hop=cfg.hop,
+                    batch_windows=cfg.batch_windows,
                     ring_depth=ring_depth, n_sweeps=n_sweeps,
-                    fft_size=app.fft_size, interpret=_interpret(),
-                    block_frames=cfg.block_rows, outputs=cfg.outputs)
+                    interpret=_interpret(), block_frames=cfg.block_rows,
+                    outputs=cfg.outputs)
         if self._retry is not None:
             return self._retry.call(dispatch)
         return dispatch()
@@ -309,9 +330,8 @@ class ResidentStream:
             # same degenerate contract as the host path: no frames, no
             # retires, the kernel's canonical empty dict
             self.last_drains = []
-            w = self.app.svm_w.shape
-            return empty_outputs(cfg.window, w[0], w[1], sig.dtype,
-                                 cfg.outputs)
+            return graph_empty_outputs(self._graph, cfg.window, sig.dtype,
+                                       cfg.outputs)
         n_batches = -(-n // cfg.batch_windows)
         outs, _, snaps = self._run(sig, self._ring_depth(n_batches))
         self._drain(snaps)

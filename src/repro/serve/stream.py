@@ -63,10 +63,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.biosignal import BiosignalApp, make_app
+from repro.kernels.pipeline.graph import (canonical_graph_outputs,
+                                          get_graph_factory,
+                                          graph_empty_outputs)
 from repro.kernels.pipeline.kernel import empty_outputs
 from repro.kernels.pipeline.ops import (OUTPUTS, app_pipeline,
                                         app_pipeline_stream,
-                                        canonical_outputs,
+                                        canonical_outputs, default_app,
+                                        graph_pipeline,
+                                        graph_pipeline_stream,
                                         stream_frame_count)
 
 
@@ -103,6 +108,12 @@ class StreamConfig:
     #                             per column, e.g. measured rates from
     #                             StreamTelemetry / deal_weights); None =
     #                             the equal deal
+    graph: str = "biosignal"    # which registered stage graph runs
+    #                             (graph.py:get_graph_factory name; the
+    #                             ASR front-end is graph="asr"). The
+    #                             default `outputs` then means ALL of
+    #                             that graph's outputs. Non-biosignal
+    #                             graphs are single-column for now.
 
 
 # single source of the framing arithmetic (shared with the kernel, whose
@@ -303,10 +314,23 @@ class BiosignalStream:
                  telemetry: StreamTelemetry | None = None,
                  stream_id=None, column: int = 0,
                  injector=None, retry=None):
-        self.app = app or make_app()
         cfg = cfg or StreamConfig()
-        self.cfg = dataclasses.replace(
-            cfg, outputs=canonical_outputs(cfg.outputs))
+        if cfg.graph == "biosignal":
+            self.app = app or make_app()
+            self._graph = None          # biosignal keeps its sharded path
+            cfg = dataclasses.replace(
+                cfg, outputs=canonical_outputs(cfg.outputs))
+        else:
+            self.app = app if app is not None else default_app(cfg.graph)
+            self._graph, _ = get_graph_factory(cfg.graph)(self.app)
+            # the config default (the biosignal 4-tuple) means "all of
+            # THIS graph's outputs" for a non-biosignal graph
+            sel = None if cfg.outputs is OUTPUTS else cfg.outputs
+            cfg = dataclasses.replace(
+                cfg, outputs=canonical_graph_outputs(self._graph, sel))
+            assert cfg.n_columns == 1 and cfg.column_weights is None, \
+                "non-biosignal graphs are single-column (no sharded entry)"
+        self.cfg = cfg
         assert self.cfg.window >= self.app.fft_size, (
             self.cfg.window, self.app.fft_size)
         assert 0 < self.cfg.hop <= self.cfg.window
@@ -383,6 +407,12 @@ class BiosignalStream:
         def dispatch():
             if self.injector is not None:
                 self.injector.on_dispatch(self.column)
+            if self._graph is not None:
+                return graph_pipeline_stream(
+                    cfg.graph, self.app, self._place(chunk),
+                    window=cfg.window, hop=cfg.hop,
+                    block_frames=cfg.block_rows, autotune=cfg.autotune,
+                    outputs=cfg.outputs)
             return app_pipeline_stream(self.app, self._place(chunk),
                                        window=cfg.window, hop=cfg.hop,
                                        block_frames=cfg.block_rows,
@@ -397,6 +427,12 @@ class BiosignalStream:
 
     def _dispatch_frames(self, frames):
         """Pre-framed dispatch (fallback/reference path)."""
+        if self._graph is not None:
+            return graph_pipeline(self.cfg.graph, self.app,
+                                  self._place(frames),
+                                  block_rows=self.cfg.block_rows,
+                                  autotune=self.cfg.autotune,
+                                  outputs=self.cfg.outputs)
         return app_pipeline(self.app, self._place(frames),
                             block_rows=self.cfg.block_rows,
                             autotune=self.cfg.autotune,
@@ -455,6 +491,9 @@ class BiosignalStream:
 
     def _empty(self, dtype) -> dict:
         """Zero-frame result: same keys/shapes/dtypes as the kernel path."""
+        if self._graph is not None:
+            return graph_empty_outputs(self._graph, self.cfg.window, dtype,
+                                       self.cfg.outputs)
         w = self.app.svm_w.shape
         return empty_outputs(self.cfg.window, w[0], w[1], dtype,
                              self.cfg.outputs)

@@ -11,6 +11,7 @@ and that the historical import locations keep working.
 """
 import dataclasses
 
+import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
@@ -18,7 +19,8 @@ from repro.models import build_model, init_model_params
 from repro.serve import errors as err
 from repro.serve.engine import ColumnScheduler, Engine, PagedEngine, Request
 from repro.serve.engine_fault import FaultTolerantEngine
-from repro.serve.frontend import ServeFrontend, StreamOpen, Ticket
+from repro.serve.frontend import (AsrResult, AsrTranscribe, ServeFrontend,
+                                  StreamOpen, Ticket)
 
 PROMPTS = {0: [3, 1, 4, 1], 1: [5, 9, 2], 2: [6, 5], 3: [8, 9, 7, 9, 3]}
 
@@ -148,6 +150,91 @@ def test_queue_full_backpressure_retries_next_pump(setup):
     assert statuses == ["running", "running", "queued", "queued"]
     front.run()
     assert all(t.status == "done" for t in tickets)
+
+
+# ------------------------------------------------------- the ASR class
+
+@pytest.fixture(scope="module")
+def asr_setup():
+    """Reduced whisper-medium enc-dec engine — the ASR decode backend."""
+    cfg = dataclasses.replace(reduced(get_config("whisper-medium")),
+                              vocab_size=64)
+    model = build_model(cfg)
+    params = init_model_params(model, seed=3)
+    compiled = Engine.compile_model(model)
+    return model, params, compiled
+
+
+def _audio(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n).astype(np.float32)
+
+
+def test_asr_ticket_lifecycle(asr_setup):
+    """The third class end to end: fused featurize at dispatch, enc-dec
+    decode, AsrResult pairing log-mel features with the finished
+    request."""
+    front = ServeFrontend(engine=_engine(asr_setup))
+    t = front.submit(AsrTranscribe(7, _audio(512 * 3), max_new=4))
+    assert (t.work_class, t.status) == ("asr", "queued")
+    with pytest.raises(err.TicketNotReady):
+        t.result()
+    front.run()
+    assert t.status == "done"
+    res = t.result()
+    assert isinstance(res, AsrResult) and res.rid == 7
+    # 512*3 samples at (window=512, hop=160) -> 7 frames of 64 mels
+    assert res.features.shape == (7, 64)
+    assert np.isfinite(np.asarray(res.features)).all()
+    assert res.tokens == res.request.out
+    assert 1 <= len(res.tokens) <= 4
+    assert front._features == {}               # stash drained on finish
+
+
+def test_asr_requires_engine():
+    front = ServeFrontend(scheduler=ColumnScheduler(devices=["c0"]))
+    with pytest.raises(ValueError, match="no engine"):
+        front.submit(AsrTranscribe(0, _audio(1024)))
+
+
+def test_asr_default_qos_covers_three_classes(asr_setup):
+    front = ServeFrontend(engine=_engine(asr_setup))
+    assert front.qos == {"lm": 1, "stream": 1, "asr": 1}
+
+
+def test_three_classes_one_front_end(asr_setup):
+    """LM requests, stream opens, AND transcriptions through the ONE
+    submit verb, each resolving with its class-typed result."""
+    sched = ColumnScheduler(devices=["c0", "c1"])
+    front = ServeFrontend(engine=_engine(asr_setup), scheduler=sched)
+    t_lm = front.submit(Request(0, [3, 1, 4], max_new=4))
+    t_st = front.submit(StreamOpen(stream_id="s-0"))
+    t_asr = front.submit(AsrTranscribe(1, _audio(512 * 2, seed=2),
+                                       max_new=4))
+    front.run()
+    assert [t.status for t in (t_lm, t_st, t_asr)] == ["done"] * 3
+    assert t_lm.result().rid == 0
+    assert t_st.result().column == sched.column_of("s-0")
+    res = t_asr.result()
+    assert isinstance(res, AsrResult)
+    assert res.features.shape[1] == 64
+
+
+def test_asr_backpressure_reuses_feature_stash(asr_setup):
+    """`QueueFull` leaves ASR tickets queued; the features computed at
+    the first dispatch attempt are stashed and reused on the retry (and
+    every ticket still resolves)."""
+    eng = _engine(asr_setup, FaultTolerantEngine, max_queue=1)
+    front = ServeFrontend(engine=eng)
+    tickets = [front.submit(AsrTranscribe(r, _audio(512 * 2, seed=r),
+                                          max_new=2)) for r in range(3)]
+    n = front.pump()
+    assert n == 1                              # the queue bound
+    assert [t.status for t in tickets] == ["running", "queued", "queued"]
+    front.run()
+    assert all(t.status == "done" for t in tickets)
+    assert {t.result().rid for t in tickets} == {0, 1, 2}
+    assert front._features == {}
 
 
 # --------------------------------------------------------- re-provisioning

@@ -22,6 +22,11 @@ Artifact names (`BENCH_*.json`), URLs, and glob patterns are ignored.
 
 Usage: ``python tools/check_docs.py [files-or-dirs...]`` (default:
 ``docs`` and ``README.md``). Exits 1 with one line per broken reference.
+
+On a default (argument-less) run the docs in `REQUIRED` must be among
+the checked set — the authoring guide `docs/STAGE_GRAPHS.md` in
+particular is load-bearing for the stage-graph layer, so deleting or
+renaming it fails the check instead of silently shrinking coverage.
 """
 from __future__ import annotations
 
@@ -31,6 +36,11 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 CHECKED_SUFFIXES = (".py", ".md", ".yml", ".toml")
+
+# docs that MUST exist and be checked on a default run (see module
+# docstring) — extend this when a new doc becomes load-bearing
+REQUIRED = ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md",
+            "docs/STAGE_GRAPHS.md")
 
 # a repo-looking path, optionally with a :symbol anchor (only for .py)
 _PATH_RE = re.compile(
@@ -112,6 +122,11 @@ def main(argv: list[str]) -> int:
                   file=sys.stderr)
             return 2
     errors = []
+    if not argv:
+        rels = {str(d.relative_to(ROOT)) for d in docs
+                if d.is_relative_to(ROOT)}
+        errors += [f"required doc missing from tree: {r}"
+                   for r in REQUIRED if r not in rels]
     for doc in docs:
         errors += check_file(doc)
     for e in errors:
